@@ -1,0 +1,115 @@
+"""Kernel micro-benchmarks: fused vs unfused / chunked vs sequential.
+
+On CPU these time the *interpret-mode* kernels (functional check + rough
+op-count proxy) and the pure-jnp fallbacks (the actual CPU execution path);
+the structural claim (bytes touched per consensus step) is verified in the
+dry-run HLO instead — see EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _bench(fn, *args, iters=5, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / iters * 1e6, out  # us
+
+
+def bench_consensus(n=1 << 20, d=3):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=n), jnp.float32)
+    nbrs = jnp.asarray(rng.normal(size=(d, n)), jnp.float32)
+    w_nbr = jnp.full((d,), 0.2, jnp.float32)
+    w_self = jnp.asarray(0.4, jnp.float32)
+    beta = jnp.full((d,), 1.0 / d, jnp.float32)
+
+    from repro.kernels.consensus_mix import ref as cm_ref
+
+    fused = jax.jit(lambda *a: cm_ref.consensus_mix_ref(*a, 10))
+
+    def unfused(x, nbrs, w_self, w_nbr, beta):
+        # two separate passes over the neighbor tensors (what the kernel fuses)
+        mixed = w_self * x + jnp.einsum("d,dn->n", w_nbr, nbrs)
+        nbr_avg = jnp.einsum("d,dn->n", beta, nbrs)
+        return mixed, (nbr_avg - x) / 10
+
+    t_fused, _ = _bench(fused, x, nbrs, w_self, w_nbr, beta)
+    t_unfused, _ = _bench(jax.jit(unfused), x, nbrs, w_self, w_nbr, beta)
+    return [
+        ("consensus_mix_fused_16M", t_fused, t_unfused / max(t_fused, 1e-9)),
+        ("consensus_mix_unfused_16M", t_unfused, 1.0),
+    ]
+
+
+def bench_attention(s=512, d=64, h=4):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(1, h, s, d)), jnp.float32)
+    from repro.kernels.flash_attention.ref import attention_ref
+
+    ref = jax.jit(lambda q, k, v: attention_ref(q, k, v, causal=True))
+    t_ref, _ = _bench(ref, q, q, q)
+    return [("attention_ref_s512", t_ref, 4 * s * s * d * h / 1e6)]
+
+
+def bench_wkv6(t=256, h=8, dk=64):
+    rng = np.random.default_rng(0)
+    shape = (1, t, h, dk)
+    r, k, v = (jnp.asarray(rng.normal(size=shape), jnp.float32) for _ in range(3))
+    ld = -jnp.asarray(rng.uniform(0.01, 2.0, size=shape), jnp.float32)
+    u = jnp.zeros((h, dk), jnp.float32)
+
+    from repro.kernels.rwkv6.ref import wkv6_ref
+
+    seq = jax.jit(lambda *a: wkv6_ref(*a)[0])
+    t_seq, _ = _bench(seq, r, k, v, ld, u)
+    return [("wkv6_sequential_t256", t_seq, t * h * dk * dk * 2 / 1e6)]
+
+
+def bench_ssd(t=256, h=8, p=64, n=64):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(1, t, h, p)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(1, t, h, n)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(1, t, h, n)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 1.0, size=(1, t, h)), jnp.float32)
+    a = -jnp.ones((h,), jnp.float32)
+
+    from repro.kernels.mamba2.ref import ssd_ref
+
+    seq = jax.jit(lambda *args: ssd_ref(*args)[0])
+    t_seq, _ = _bench(seq, x, b, c, dt, a)
+    return [("ssd_sequential_t256", t_seq, t * h * p * n * 2 / 1e6)]
+
+
+def bench_p2p_round(k=16):
+    """Wall time of one full P2PL round, K=16 MLP peers (vmap runtime)."""
+    import jax.random as jr
+
+    from repro.core import p2p
+    from repro.models import mlp
+
+    cfg = p2p.P2PConfig(algorithm="p2pl_affinity", num_peers=k, local_steps=10,
+                        consensus_steps=1, lr=0.01, momentum=0.5, topology="ring")
+    state = p2p.init_state(jr.PRNGKey(0), mlp.init_2nn, cfg)
+    fn = p2p.make_round_fn(mlp.loss_2nn, cfg)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(10, k, 10, 784)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, 10, size=(10, k, 10)), jnp.int32)
+    t_round, _ = _bench(lambda s: fn(s, (x, y))[1].params, state, iters=3)
+    return [("p2pl_round_k16_T10", t_round, k * 10)]
+
+
+ALL_KERNELS = {
+    "consensus": bench_consensus,
+    "attention": bench_attention,
+    "wkv6": bench_wkv6,
+    "ssd": bench_ssd,
+    "p2p_round": bench_p2p_round,
+}

@@ -1,0 +1,43 @@
+"""Benchmark orchestrator.  One function per paper figure + kernel micro-
+benches.  Prints ``name,us_per_call,derived`` CSV (see figures.py/kernels.py).
+
+    PYTHONPATH=src python -m benchmarks.run              # reduced (CI) scale
+    PYTHONPATH=src python -m benchmarks.run --full       # paper scale
+    PYTHONPATH=src python -m benchmarks.run --only fig3,consensus
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale rounds/data")
+    ap.add_argument("--only", default="", help="comma-separated subset")
+    args = ap.parse_args(argv)
+
+    from benchmarks.figures import ALL_FIGURES
+    from benchmarks.kernels import ALL_KERNELS
+
+    only = set(args.only.split(",")) if args.only else None
+    failures = 0
+    print("name,us_per_call,derived")
+    for name, fn in {**ALL_KERNELS, **ALL_FIGURES}.items():
+        if only and name not in only:
+            continue
+        try:
+            out = fn(args.full) if name in ALL_FIGURES else fn()
+            for row_name, us, derived in out:
+                print(f"{row_name},{us:.1f},{derived}", flush=True)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{name},ERROR,0", flush=True)
+            traceback.print_exc(limit=5, file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Batched serving demo: prefill a prompt batch and greedy-decode
+continuations from a (reduced) assigned architecture.
+
+    PYTHONPATH=src python examples/serve_batch.py --arch rwkv6-7b
+"""
+import argparse
+
+from repro.launch.serve import serve_batch
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--batch", type=int, default=4)
+    args = ap.parse_args()
+    serve_batch(args.arch, batch=args.batch, prompt_len=16, gen_tokens=8, verbose=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Core: the paper's peer-to-peer learning + consensus algorithms."""
+from repro.core.graph import CommGraph, build_graph, mixing_matrix, affinity_matrix, spectral_gap
+from repro.core.p2p import (
+    ALGORITHMS,
+    P2PConfig,
+    P2PState,
+    init_state,
+    local_phase,
+    consensus_phase,
+    run_round,
+    make_round_fn,
+    mixing_constants,
+)
+from repro.core import consensus
+from repro.core.metrics import RoundLog
+
+__all__ = [
+    "ALGORITHMS",
+    "CommGraph",
+    "P2PConfig",
+    "P2PState",
+    "RoundLog",
+    "affinity_matrix",
+    "build_graph",
+    "consensus",
+    "consensus_phase",
+    "init_state",
+    "local_phase",
+    "make_round_fn",
+    "mixing_constants",
+    "mixing_matrix",
+    "run_round",
+    "spectral_gap",
+]

@@ -1,0 +1,197 @@
+"""Distributed average-consensus (gossip) operators.
+
+Three execution forms of the same mathematical op — out_k = sum_j W[k,j] w_j:
+
+1. **Stacked einsum** (`mix_stacked`): peer parameters are a pytree whose
+   leaves carry a leading K axis. Used for CPU experiments (vmap runtime) and
+   for the ``peer_axis="data"`` sharded mode, where the K axis is sharded over
+   the mesh and XLA lowers the einsum into the appropriate collectives.
+2. **Sparse gather** (`mix_sparse`): padded neighbor-index form; O(K * deg)
+   instead of O(K^2). Feeds the Pallas `consensus_mix` kernel.
+3. **Mesh collectives** (`mix_psum`, `mix_ring`): explicit collectives inside
+   ``shard_map`` for ``peer_axis="pod"`` production mode — complete graphs map
+   to a weighted all-reduce, ring graphs to two collective-permutes.
+
+All operate on arbitrary pytrees and preserve leaf dtypes (mixing is computed
+in float32 and cast back, matching how one would do it on TPU to avoid bf16
+accumulation error across many neighbors).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def _mix_leaf(w_mat: jax.Array, leaf: jax.Array) -> jax.Array:
+    """einsum over the leading peer axis, f32 accumulation."""
+    out = jnp.einsum(
+        "kj,j...->k...",
+        w_mat.astype(jnp.float32),
+        leaf.astype(jnp.float32),
+        precision=jax.lax.Precision.HIGHEST,
+    )
+    return out.astype(leaf.dtype)
+
+
+def mix_stacked(w_mat: jax.Array, stacked: PyTree) -> PyTree:
+    """Apply mixing matrix across the leading K axis of every leaf."""
+    return jax.tree.map(lambda x: _mix_leaf(w_mat, x), stacked)
+
+
+# ---------------------------------------------------------------------------
+# Sparse (padded-neighbor) form
+# ---------------------------------------------------------------------------
+
+
+def sparse_mixing(w_mat: np.ndarray) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Convert a dense mixing matrix to padded (self_w, nbr_idx, nbr_w).
+
+    nbr_idx: (K, Dmax) int32, padded with the peer's own index (weight 0).
+    Returns numpy arrays — static per topology, closed over by jit.
+    """
+    k = w_mat.shape[0]
+    off_diag = w_mat - np.diag(np.diag(w_mat))
+    deg = (off_diag != 0).sum(axis=1)
+    dmax = max(int(deg.max()), 1) if k else 1
+    nbr_idx = np.tile(np.arange(k, dtype=np.int32)[:, None], (1, dmax))
+    nbr_w = np.zeros((k, dmax), dtype=np.float32)
+    for i in range(k):
+        nbrs = np.nonzero(off_diag[i])[0]
+        nbr_idx[i, : len(nbrs)] = nbrs
+        nbr_w[i, : len(nbrs)] = off_diag[i, nbrs]
+    self_w = np.diag(w_mat).astype(np.float32)
+    return self_w, nbr_idx, nbr_w
+
+
+def mix_sparse(
+    self_w: jax.Array, nbr_idx: jax.Array, nbr_w: jax.Array, stacked: PyTree
+) -> PyTree:
+    """out_k = self_w[k] * x_k + sum_d nbr_w[k, d] * x[nbr_idx[k, d]]."""
+
+    def leaf(x):
+        xf = x.astype(jnp.float32)
+        gathered = xf[nbr_idx]  # (K, Dmax, ...)
+        bcast = nbr_w.reshape(nbr_w.shape + (1,) * (x.ndim - 1))
+        sw = self_w.reshape((-1,) + (1,) * (x.ndim - 1))
+        out = sw * xf + jnp.sum(bcast * gathered, axis=1)
+        return out.astype(x.dtype)
+
+    return jax.tree.map(leaf, stacked)
+
+
+# ---------------------------------------------------------------------------
+# Mesh-collective forms (inside shard_map over the peer axis)
+# ---------------------------------------------------------------------------
+
+
+def mix_psum(x: PyTree, axis_name: str, *, self_weight: float, peer_weight: float) -> PyTree:
+    """Complete-graph gossip with uniform weights as one weighted all-reduce.
+
+    out_k = self_weight * x_k + peer_weight * sum_{j != k} x_j
+          = (self_weight - peer_weight) * x_k + peer_weight * psum(x).
+    """
+
+    def leaf(v):
+        vf = v.astype(jnp.float32)
+        total = jax.lax.psum(vf, axis_name)
+        out = (self_weight - peer_weight) * vf + peer_weight * total
+        return out.astype(v.dtype)
+
+    return jax.tree.map(leaf, x)
+
+
+def mix_ring(
+    x: PyTree, axis_name: str, *, self_weight: float, left_weight: float, right_weight: float
+) -> PyTree:
+    """Ring-graph gossip: two collective_permutes + weighted sum."""
+    n = jax.lax.axis_size(axis_name)
+    fwd = [(i, (i + 1) % n) for i in range(n)]
+    bwd = [((i + 1) % n, i) for i in range(n)]
+
+    def leaf(v):
+        vf = v.astype(jnp.float32)
+        from_left = jax.lax.ppermute(vf, axis_name, perm=fwd)
+        from_right = jax.lax.ppermute(vf, axis_name, perm=bwd)
+        out = self_weight * vf + left_weight * from_left + right_weight * from_right
+        return out.astype(v.dtype)
+
+    return jax.tree.map(leaf, x)
+
+
+def mix_collective(
+    x: PyTree,
+    axis_name: str,
+    w_row: jax.Array,
+    *,
+    topology: str = "complete",
+) -> PyTree:
+    """General row of a mixing matrix applied across a mesh axis.
+
+    ``w_row`` is the (K,) weight row for *this* shard's peer index
+    (use jax.lax.axis_index to select).  Complete topology uses an all-gather;
+    sparse topologies should prefer mix_ring / mix_psum.
+    """
+    if topology == "complete":
+
+        def leaf(v):
+            vf = v.astype(jnp.float32)
+            allv = jax.lax.all_gather(vf, axis_name)  # (K, ...)
+            w = w_row.reshape((-1,) + (1,) * (allv.ndim - 1))
+            return jnp.sum(w * allv, axis=0).astype(v.dtype)
+
+        return jax.tree.map(leaf, x)
+    raise ValueError(f"mix_collective only supports complete topology, got {topology!r}")
+
+
+# ---------------------------------------------------------------------------
+# Max-norm synchronization (P2PL initialization, Ref. [6])
+# ---------------------------------------------------------------------------
+
+
+def max_norm_sync(stacked: PyTree) -> PyTree:
+    """All peers adopt, per leaf, the initialization with the largest L2 norm.
+
+    P2PL replaces plain random init with a one-round synchronization where the
+    highest-norm initialization wins (larger-norm inits preserve gradient
+    diversity better after averaging).  Communication cost: one scalar norm
+    exchange + one parameter broadcast — modeled here as an argmax-gather over
+    the stacked peer axis.
+    """
+
+    def leaf(x):
+        k = x.shape[0]
+        norms = jnp.sqrt(jnp.sum(jnp.square(x.astype(jnp.float32).reshape(k, -1)), axis=1))
+        winner = jnp.argmax(norms)
+        return jnp.broadcast_to(x[winner], x.shape).astype(x.dtype)
+
+    return jax.tree.map(leaf, stacked)
+
+
+def consensus_error(stacked: PyTree) -> jax.Array:
+    """Model drift metric: mean_k ||w_k - w_bar||_2 over all leaves (f32)."""
+    leaves = jax.tree.leaves(stacked)
+    k = leaves[0].shape[0]
+    sq = jnp.zeros((k,), jnp.float32)
+    for x in leaves:
+        xf = x.astype(jnp.float32).reshape(k, -1)
+        mean = jnp.mean(xf, axis=0, keepdims=True)
+        sq = sq + jnp.sum(jnp.square(xf - mean), axis=1)
+    return jnp.mean(jnp.sqrt(sq))
+
+
+def pairwise_drift(stacked: PyTree) -> jax.Array:
+    """Max over peer pairs of ||w_i - w_j||_2 — the paper's drift/divergence."""
+    leaves = jax.tree.leaves(stacked)
+    k = leaves[0].shape[0]
+    sq = jnp.zeros((k, k), jnp.float32)
+    for x in leaves:
+        xf = x.astype(jnp.float32).reshape(k, -1)
+        # ||x_i - x_j||^2 = ||x_i||^2 + ||x_j||^2 - 2 x_i . x_j
+        n2 = jnp.sum(xf * xf, axis=1)
+        sq = sq + n2[:, None] + n2[None, :] - 2.0 * (xf @ xf.T)
+    return jnp.sqrt(jnp.maximum(sq, 0.0)).max()

@@ -1,0 +1,234 @@
+"""Communication graphs and mixing matrices for peer-to-peer learning.
+
+The paper (Sec. III-C) models the network as a flat, undirected, connected
+graph; devices exchange parameters only over its edges.  Mixing matrices are
+row-stochastic (P2PL, Sec. IV-B) — the paper's choice is data-size weighted:
+
+    alpha_kj = n_j / (n_k + sum_{i in N(k)} n_i)        (neighbors j)
+    alpha_kk = 1 - sum_j alpha_kj
+
+Doubly-stochastic variants (metropolis, uniform) are provided for the
+local-DSGD baselines common in the literature [10], [12].
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+TOPOLOGIES = (
+    "complete",
+    "ring",
+    "chain",
+    "star",
+    "torus2d",
+    "erdos_renyi",
+    "hypercube",
+    "disconnected",  # for "no consensus" baselines (self-loops only)
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class CommGraph:
+    """An undirected communication graph over K peers.
+
+    adjacency: (K, K) bool, no self loops.
+    """
+
+    adjacency: np.ndarray
+
+    def __post_init__(self):
+        a = np.asarray(self.adjacency, dtype=bool)
+        if a.ndim != 2 or a.shape[0] != a.shape[1]:
+            raise ValueError(f"adjacency must be square, got {a.shape}")
+        if not np.array_equal(a, a.T):
+            raise ValueError("graph must be undirected (symmetric adjacency)")
+        if a.diagonal().any():
+            raise ValueError("no self loops in adjacency (self weight is alpha_kk)")
+        object.__setattr__(self, "adjacency", a)
+
+    @property
+    def num_peers(self) -> int:
+        return self.adjacency.shape[0]
+
+    def neighbors(self, k: int) -> np.ndarray:
+        return np.nonzero(self.adjacency[k])[0]
+
+    def degree(self) -> np.ndarray:
+        return self.adjacency.sum(axis=1)
+
+    def is_connected(self) -> bool:
+        k = self.num_peers
+        seen = np.zeros(k, dtype=bool)
+        stack = [0]
+        seen[0] = True
+        while stack:
+            v = stack.pop()
+            for u in np.nonzero(self.adjacency[v])[0]:
+                if not seen[u]:
+                    seen[u] = True
+                    stack.append(int(u))
+        return bool(seen.all())
+
+    def max_degree(self) -> int:
+        return int(self.degree().max()) if self.num_peers else 0
+
+
+def build_graph(topology: str, num_peers: int, *, p: float = 0.3, seed: int = 0) -> CommGraph:
+    """Construct a named topology over ``num_peers`` devices."""
+    k = num_peers
+    if k < 1:
+        raise ValueError("need at least one peer")
+    a = np.zeros((k, k), dtype=bool)
+    if topology == "complete":
+        a = ~np.eye(k, dtype=bool)
+        if k == 1:
+            a = np.zeros((1, 1), dtype=bool)
+    elif topology == "ring":
+        for i in range(k):
+            a[i, (i + 1) % k] = a[(i + 1) % k, i] = True
+        np.fill_diagonal(a, False)
+    elif topology == "chain":
+        for i in range(k - 1):
+            a[i, i + 1] = a[i + 1, i] = True
+    elif topology == "star":
+        a[0, 1:] = a[1:, 0] = True
+    elif topology == "torus2d":
+        side = int(round(np.sqrt(k)))
+        if side * side != k:
+            raise ValueError(f"torus2d needs a square peer count, got {k}")
+        idx = lambda r, c: r * side + c  # noqa: E731
+        for r in range(side):
+            for c in range(side):
+                a[idx(r, c), idx((r + 1) % side, c)] = True
+                a[idx((r + 1) % side, c), idx(r, c)] = True
+                a[idx(r, c), idx(r, (c + 1) % side)] = True
+                a[idx(r, (c + 1) % side), idx(r, c)] = True
+        np.fill_diagonal(a, False)
+    elif topology == "hypercube":
+        dim = int(round(np.log2(k)))
+        if 2**dim != k:
+            raise ValueError(f"hypercube needs a power-of-2 peer count, got {k}")
+        for i in range(k):
+            for d in range(dim):
+                j = i ^ (1 << d)
+                a[i, j] = a[j, i] = True
+    elif topology == "erdos_renyi":
+        rng = np.random.default_rng(seed)
+        while True:
+            u = rng.random((k, k)) < p
+            a = np.triu(u, 1)
+            a = a | a.T
+            g = CommGraph(a)
+            if g.is_connected():
+                return g
+    elif topology == "disconnected":
+        pass  # all-zero adjacency: every peer isolated
+    else:
+        raise ValueError(f"unknown topology {topology!r}; one of {TOPOLOGIES}")
+    return CommGraph(a)
+
+
+# ---------------------------------------------------------------------------
+# Mixing matrices
+# ---------------------------------------------------------------------------
+
+MIXINGS = ("data_weighted", "metropolis", "uniform_neighbor", "identity")
+
+
+def mixing_matrix(
+    graph: CommGraph,
+    mixing: str = "data_weighted",
+    *,
+    data_sizes: Sequence[int] | None = None,
+    consensus_step_size: float | np.ndarray = 1.0,
+) -> np.ndarray:
+    """Row-stochastic mixing matrix W with W[k, j] = alpha_kj.
+
+    data_weighted — the paper's choice (Sec. V-A):
+        alpha_kj = n_j / (n_k + sum_{i in N(k)} n_i), alpha_kk = remainder.
+    metropolis — doubly stochastic: alpha_kj = 1 / (1 + max(deg_k, deg_j)).
+    uniform_neighbor — alpha_kj = 1 / (deg_k + 1) (row stochastic).
+    identity — no mixing (isolated training baseline).
+
+    consensus_step_size: the paper's per-device epsilon_k^(t); W_eps =
+    (1 - eps_k) I + eps_k W applied row-wise. eps=1 reproduces W.
+    """
+    k = graph.num_peers
+    adj = graph.adjacency
+    if mixing == "identity":
+        w = np.eye(k)
+    elif mixing == "data_weighted":
+        if data_sizes is None:
+            data_sizes = np.ones(k)
+        n = np.asarray(data_sizes, dtype=np.float64)
+        if n.shape != (k,) or (n <= 0).any():
+            raise ValueError("data_sizes must be positive, one per peer")
+        w = np.zeros((k, k))
+        for i in range(k):
+            nbrs = np.nonzero(adj[i])[0]
+            denom = n[i] + n[nbrs].sum()
+            w[i, nbrs] = n[nbrs] / denom
+            w[i, i] = 1.0 - w[i, nbrs].sum()
+    elif mixing == "metropolis":
+        deg = graph.degree()
+        w = np.zeros((k, k))
+        for i in range(k):
+            for j in np.nonzero(adj[i])[0]:
+                w[i, j] = 1.0 / (1.0 + max(deg[i], deg[j]))
+            w[i, i] = 1.0 - w[i].sum()
+    elif mixing == "uniform_neighbor":
+        deg = graph.degree()
+        w = np.zeros((k, k))
+        for i in range(k):
+            nbrs = np.nonzero(adj[i])[0]
+            w[i, nbrs] = 1.0 / (deg[i] + 1.0)
+            w[i, i] = 1.0 - w[i, nbrs].sum()
+    else:
+        raise ValueError(f"unknown mixing {mixing!r}; one of {MIXINGS}")
+
+    eps = np.asarray(consensus_step_size, dtype=np.float64)
+    if eps.ndim == 0:
+        eps = np.full(k, float(eps))
+    if eps.shape != (k,):
+        raise ValueError("consensus_step_size must be scalar or (K,)")
+    w = (1.0 - eps)[:, None] * np.eye(k) + eps[:, None] * w
+
+    assert np.all(w >= -1e-12), "mixing weights must be nonnegative"
+    assert np.allclose(w.sum(axis=1), 1.0), "mixing matrix must be row stochastic"
+    return w
+
+
+def affinity_matrix(graph: CommGraph, *, data_sizes: Sequence[int] | None = None) -> np.ndarray:
+    """Beta matrix for the affinity bias d (Sec. V-C):
+
+        beta_kj = n_j / sum_{i in N(k)} n_i  for j in N(k), else 0.
+
+    Rows sum to 1 over *neighbors only* (no self weight).  Isolated peers get
+    an all-zero row (d stays 0 — no neighbors to be biased toward).
+    """
+    k = graph.num_peers
+    adj = graph.adjacency
+    if data_sizes is None:
+        data_sizes = np.ones(k)
+    n = np.asarray(data_sizes, dtype=np.float64)
+    b = np.zeros((k, k))
+    for i in range(k):
+        nbrs = np.nonzero(adj[i])[0]
+        if len(nbrs) == 0:
+            continue
+        b[i, nbrs] = n[nbrs] / n[nbrs].sum()
+    return b
+
+
+def spectral_gap(w: np.ndarray) -> float:
+    """1 - |lambda_2| of the mixing matrix — the consensus rate.
+
+    For row-stochastic (not necessarily symmetric) W we use the magnitudes of
+    the eigenvalues; lambda_1 = 1 always.
+    """
+    eig = np.sort(np.abs(np.linalg.eigvals(w)))[::-1]
+    if len(eig) < 2:
+        return 1.0
+    return float(1.0 - eig[1])

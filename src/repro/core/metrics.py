@@ -1,0 +1,105 @@
+"""Round-by-round measurement of the paper's phenomena.
+
+The paper's central instrument is test accuracy evaluated at *both* phase
+boundaries of every round (after local training, after consensus).  The
+RoundLog accumulates those series plus drift metrics, and derives the
+oscillation statistics quoted in Figs. 2-6.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class RoundLog:
+    """Accumulates per-round measurements; numpy-only, serializable."""
+
+    after_local: dict[str, list] = dataclasses.field(default_factory=dict)
+    after_consensus: dict[str, list] = dataclasses.field(default_factory=dict)
+    drift: list = dataclasses.field(default_factory=list)
+    consensus_error: list = dataclasses.field(default_factory=list)
+    train_loss: list = dataclasses.field(default_factory=list)
+
+    def record(
+        self,
+        *,
+        local_acc: dict[str, Any],
+        consensus_acc: dict[str, Any],
+        drift: float | None = None,
+        consensus_error: float | None = None,
+        train_loss: float | None = None,
+    ) -> None:
+        for k, v in local_acc.items():
+            self.after_local.setdefault(k, []).append(np.asarray(v, np.float64))
+        for k, v in consensus_acc.items():
+            self.after_consensus.setdefault(k, []).append(np.asarray(v, np.float64))
+        if drift is not None:
+            self.drift.append(float(drift))
+        if consensus_error is not None:
+            self.consensus_error.append(float(consensus_error))
+        if train_loss is not None:
+            self.train_loss.append(float(train_loss))
+
+    # -- derived statistics -------------------------------------------------
+
+    def series(self, group: str, phase: str = "consensus") -> np.ndarray:
+        src = self.after_consensus if phase == "consensus" else self.after_local
+        return np.stack(src[group])  # (rounds, ...) device-mean applied by caller
+
+    def oscillation(self, group: str) -> np.ndarray:
+        """Per-round |after_consensus - after_local|, averaged over peers."""
+        a = np.stack(self.after_local[group])
+        c = np.stack(self.after_consensus[group])
+        d = np.abs(c - a)
+        return d.mean(axis=tuple(range(1, d.ndim))) if d.ndim > 1 else d
+
+    def mean_oscillation(self, group: str, first_n: int | None = None) -> float:
+        o = self.oscillation(group)
+        return float(o[:first_n].mean()) if first_n else float(o.mean())
+
+    def peak_to_trough(self, group: str) -> float:
+        """Worst single-round oscillation (the '0% on unseen classes' events)."""
+        return float(self.oscillation(group).max())
+
+    def final_accuracy(self, group: str, phase: str = "consensus", last_n: int = 5) -> float:
+        s = self.series(group, phase)
+        s = s.mean(axis=tuple(range(1, s.ndim))) if s.ndim > 1 else s
+        return float(s[-last_n:].mean())
+
+    def rounds_to_accuracy(self, group: str, threshold: float, phase: str = "consensus") -> int:
+        """First round where min-over-peers accuracy crosses threshold (-1 if never)."""
+        s = self.series(group, phase)
+        s = s.min(axis=tuple(range(1, s.ndim))) if s.ndim > 1 else s
+        hits = np.nonzero(s >= threshold)[0]
+        return int(hits[0]) if len(hits) else -1
+
+    def to_json(self) -> str:
+        def conv(d):
+            return {k: np.stack(v).tolist() for k, v in d.items()}
+
+        return json.dumps(
+            {
+                "after_local": conv(self.after_local),
+                "after_consensus": conv(self.after_consensus),
+                "drift": self.drift,
+                "consensus_error": self.consensus_error,
+                "train_loss": self.train_loss,
+            }
+        )
+
+    @staticmethod
+    def from_json(s: str) -> "RoundLog":
+        raw = json.loads(s)
+        log = RoundLog()
+        log.after_local = {k: [np.asarray(r) for r in v] for k, v in raw["after_local"].items()}
+        log.after_consensus = {
+            k: [np.asarray(r) for r in v] for k, v in raw["after_consensus"].items()
+        }
+        log.drift = raw["drift"]
+        log.consensus_error = raw["consensus_error"]
+        log.train_loss = raw["train_loss"]
+        return log

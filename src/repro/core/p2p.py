@@ -1,0 +1,291 @@
+"""The paper's algorithm family, as one parameterized implementation.
+
+P2PL with Affinity (Sec. IV-A) subsumes every baseline in the paper:
+
+    algorithm          T      S    momentum  max-norm-sync  d bias  b bias
+    -----------------  -----  ---  --------  -------------  ------  ------
+    dsgd               1      1    optional  no             0       0
+    local_dsgd         T > 1  1    optional  no             0       0
+    p2pl               T > 1  S    yes       yes            0       0
+    p2pl_affinity      T > 1  S    optional  yes            yes     optional
+    isolated           T > 1  0    optional  no             0       0
+
+Learning phase (Eq. 3):   w <- w - eta * grad F_k(w) + eta_d * d_k
+Consensus phase (Eq. 4):  w_k <- sum_j alpha_kj w_j + eta_b * b_k
+Affinity biases (Sec. IV-A, "one possible choice", which Sec. V-C uses):
+    d_k <- (1/T) sum_j beta_kj (w_j - w_k)   (computed during consensus)
+    b_k <- (1/S) w_k                         (computed during local phase)
+
+This module is the *stacked* runtime: every state leaf carries a leading K
+(peer) axis.  On CPU the K axis is vmapped; on a mesh the same arrays are
+sharded over the peer axis and XLA lowers the mixing einsum into collectives
+(see repro/launch/train.py for the production path and
+repro/kernels/consensus_mix for the fused TPU kernel).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import consensus as consensus_lib
+from repro.core import graph as graph_lib
+
+PyTree = Any
+LossFn = Callable[[PyTree, Any], jax.Array]  # (per-peer params, per-peer batch) -> scalar
+
+ALGORITHMS = ("dsgd", "local_dsgd", "p2pl", "p2pl_affinity", "isolated")
+
+
+@dataclasses.dataclass(frozen=True)
+class P2PConfig:
+    """Hyperparameters of the P2PL-with-Affinity family."""
+
+    algorithm: str = "p2pl_affinity"
+    num_peers: int = 2
+    local_steps: int = 1  # T
+    consensus_steps: int = 1  # S
+    lr: float = 0.01  # eta
+    momentum: float = 0.0  # mu (PyTorch-default Polyak: buf = mu*buf + g; w -= lr*buf)
+    eta_d: float = 1.0  # learning-phase bias step size
+    eta_b: float = 0.0  # consensus-phase bias step size (paper's experiments: b = 0)
+    topology: str = "complete"
+    mixing: str = "data_weighted"
+    consensus_step_size: float = 1.0  # epsilon_k
+    max_norm_init: bool = False
+    erdos_renyi_p: float = 0.3
+    graph_seed: int = 0
+
+    def __post_init__(self):
+        if self.algorithm not in ALGORITHMS:
+            raise ValueError(f"unknown algorithm {self.algorithm!r}")
+        if self.algorithm == "dsgd" and (self.local_steps != 1 or self.consensus_steps != 1):
+            raise ValueError("dsgd fixes T = S = 1")
+        if self.algorithm == "isolated" and self.consensus_steps != 0:
+            raise ValueError("isolated fixes S = 0")
+        if self.local_steps < 1:
+            raise ValueError("need at least one local step per round")
+
+    @property
+    def use_affinity_d(self) -> bool:
+        return self.algorithm == "p2pl_affinity" and self.eta_d != 0.0
+
+    @property
+    def use_affinity_b(self) -> bool:
+        return self.algorithm == "p2pl_affinity" and self.eta_b != 0.0
+
+    @property
+    def use_max_norm_init(self) -> bool:
+        return self.max_norm_init or self.algorithm in ("p2pl", "p2pl_affinity")
+
+
+class P2PState(NamedTuple):
+    """Stacked peer state; every leaf has leading axis K."""
+
+    params: PyTree
+    momentum: PyTree
+    d_bias: PyTree  # affinity learning-phase bias (Eq. 3)
+    b_bias: PyTree  # affinity consensus-phase bias (Eq. 4)
+    round_idx: jax.Array  # scalar int32
+
+
+def mixing_constants(
+    cfg: P2PConfig, data_sizes: np.ndarray | None = None
+) -> tuple[np.ndarray, np.ndarray, graph_lib.CommGraph]:
+    """Static (W, Beta, graph) for a config. Computed in numpy, closed over by jit."""
+    g = graph_lib.build_graph(
+        cfg.topology, cfg.num_peers, p=cfg.erdos_renyi_p, seed=cfg.graph_seed
+    )
+    w = graph_lib.mixing_matrix(
+        g, cfg.mixing, data_sizes=data_sizes, consensus_step_size=cfg.consensus_step_size
+    )
+    beta = graph_lib.affinity_matrix(g, data_sizes=data_sizes)
+    return w, beta, g
+
+
+def init_state(rng: jax.Array, init_fn: Callable[[jax.Array], PyTree], cfg: P2PConfig) -> P2PState:
+    """Independent per-peer init (PyTorch-style default), then optional max-norm sync."""
+    keys = jax.random.split(rng, cfg.num_peers)
+    params = jax.vmap(init_fn)(keys)
+    if cfg.use_max_norm_init:
+        params = consensus_lib.max_norm_sync(params)
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return P2PState(
+        params=params,
+        momentum=zeros,
+        d_bias=jax.tree.map(jnp.zeros_like, params),
+        b_bias=jax.tree.map(jnp.zeros_like, params),
+        round_idx=jnp.zeros((), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Learning phase (Eq. 3)
+# ---------------------------------------------------------------------------
+
+
+def local_phase(
+    state: P2PState, loss_fn: LossFn, batches: PyTree, cfg: P2PConfig
+) -> tuple[P2PState, jax.Array]:
+    """Run T local steps on every peer.
+
+    batches: pytree whose leaves are (T, K, ...) — step-major, then peer.
+    Returns (new_state, per-step mean loss (T,)).
+    """
+    grad_fn = jax.grad(loss_fn)
+
+    def step(carry, batch_t):
+        params, mom = carry
+        grads = jax.vmap(grad_fn)(params, batch_t)
+        losses = jax.vmap(loss_fn)(params, batch_t)
+        if cfg.momentum:
+            mom = jax.tree.map(lambda m, g: cfg.momentum * m + g, mom, grads)
+            update = mom
+        else:
+            update = grads
+        if cfg.use_affinity_d:
+            params = jax.tree.map(
+                lambda w, u, d: w - cfg.lr * u + cfg.eta_d * d,
+                params,
+                update,
+                state.d_bias,  # d fixed during the local phase (Sec. IV-A)
+            )
+        else:
+            params = jax.tree.map(lambda w, u: w - cfg.lr * u, params, update)
+        return (params, mom), jnp.mean(losses)
+
+    (params, mom), losses = jax.lax.scan(step, (state.params, state.momentum), batches)
+
+    # b <- (1/S) w (updated during local learning; fixed during consensus).
+    b_bias = state.b_bias
+    if cfg.use_affinity_b:
+        s = max(cfg.consensus_steps, 1)
+        b_bias = jax.tree.map(lambda w: w / s, params)
+
+    return state._replace(params=params, momentum=mom, b_bias=b_bias), losses
+
+
+# ---------------------------------------------------------------------------
+# Consensus phase (Eq. 4)
+# ---------------------------------------------------------------------------
+
+
+def consensus_phase(
+    state: P2PState,
+    cfg: P2PConfig,
+    w_mat: jax.Array,
+    beta_mat: jax.Array,
+) -> P2PState:
+    """Run S consensus (gossip) steps; updates the affinity bias d en route."""
+    if cfg.consensus_steps == 0:
+        return state._replace(round_idx=state.round_idx + 1)
+
+    params, d_bias = state.params, state.d_bias
+    for _ in range(cfg.consensus_steps):
+        if cfg.use_affinity_d:
+            # d_k <- (1/T) sum_j beta_kj (w_j - w_k), from the *incoming*
+            # neighbor parameters of this consensus step (Sec. IV-A).
+            nbr_avg = consensus_lib.mix_stacked(beta_mat, params)
+            d_bias = jax.tree.map(
+                lambda avg, w: (avg - w) / cfg.local_steps, nbr_avg, params
+            )
+        mixed = consensus_lib.mix_stacked(w_mat, params)
+        if cfg.use_affinity_b:
+            mixed = jax.tree.map(
+                lambda m, b: m + cfg.eta_b * b, mixed, state.b_bias
+            )
+        params = mixed
+
+    return state._replace(params=params, d_bias=d_bias, round_idx=state.round_idx + 1)
+
+
+def run_round(
+    state: P2PState,
+    loss_fn: LossFn,
+    batches: PyTree,
+    cfg: P2PConfig,
+    w_mat: jax.Array,
+    beta_mat: jax.Array,
+) -> tuple[P2PState, P2PState, jax.Array]:
+    """One full round: local phase then consensus phase.
+
+    Returns (state_after_local, state_after_consensus, local losses (T,)) so
+    callers can evaluate test accuracy at both phase boundaries — the paper's
+    central measurement (Figs. 2-6).
+    """
+    after_local, losses = local_phase(state, loss_fn, batches, cfg)
+    after_consensus = consensus_phase(after_local, cfg, w_mat, beta_mat)
+    return after_local, after_consensus, losses
+
+
+def make_round_fn(loss_fn: LossFn, cfg: P2PConfig, data_sizes: np.ndarray | None = None):
+    """jit-compiled round closure over static mixing constants."""
+    w_np, beta_np, _ = mixing_constants(cfg, data_sizes)
+    w_mat = jnp.asarray(w_np, jnp.float32)
+    beta_mat = jnp.asarray(beta_np, jnp.float32)
+
+    @jax.jit
+    def round_fn(state: P2PState, batches: PyTree):
+        return run_round(state, loss_fn, batches, cfg, w_mat, beta_mat)
+
+    return round_fn
+
+
+# ---------------------------------------------------------------------------
+# Evaluation helpers (stratified accuracy — the paper's seen/unseen split)
+# ---------------------------------------------------------------------------
+
+
+def evaluate_stacked(
+    apply_fn: Callable[[PyTree, jax.Array], jax.Array],
+    params: PyTree,
+    images: jax.Array,
+    labels: jax.Array,
+) -> jax.Array:
+    """Per-peer test accuracy: (K,) from stacked params on a shared test set."""
+
+    def acc(p):
+        logits = apply_fn(p, images)
+        return jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+
+    return jax.vmap(acc)(params)
+
+
+def stratified_accuracy(
+    apply_fn: Callable[[PyTree, jax.Array], jax.Array],
+    params: PyTree,
+    images: jax.Array,
+    labels: jax.Array,
+    class_groups: dict[str, np.ndarray],
+) -> dict[str, jax.Array]:
+    """Accuracy per named class group (e.g. {"seen": [0,1], "unseen": [7,8]}).
+
+    Predictions are restricted to the union of all group classes, matching the
+    paper's K-class tasks (e.g. 4-class task over {0,1,7,8}).
+    """
+    all_classes = np.sort(np.concatenate(list(class_groups.values())))
+
+    def preds(p):
+        # restrict predictions to the task's class set (the paper's K-class tasks)
+        logits = apply_fn(p, images)
+        m = jnp.full((logits.shape[-1],), -1e9, jnp.float32).at[jnp.asarray(all_classes)].set(0.0)
+        return jnp.argmax(logits + m, axis=-1)
+
+    pred = jax.vmap(preds)(params)  # (K, N)
+    out = {}
+    for name, classes in class_groups.items():
+        sel = jnp.isin(labels, jnp.asarray(classes))
+        denom = jnp.maximum(jnp.sum(sel), 1)
+        out[name] = jnp.sum((pred == labels[None, :]) & sel[None, :], axis=1) / denom
+    return out
+
+
+def oscillation_amplitude(after_local: np.ndarray, after_consensus: np.ndarray) -> np.ndarray:
+    """Mean |acc_after_consensus - acc_after_local| per round — the paper's
+    sawtooth size.  Inputs: (rounds,) or (rounds, K)."""
+    a = np.asarray(after_local, np.float64)
+    c = np.asarray(after_consensus, np.float64)
+    return np.abs(c - a).mean(axis=-1) if a.ndim > 1 else np.abs(c - a)

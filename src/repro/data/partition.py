@@ -1,0 +1,77 @@
+"""Dataset partitioning across peers: IID, pathological non-IID, Dirichlet.
+
+The paper's settings:
+- IID (Sec. V-A): "randomly shuffle and equally partition" into K local sets.
+- Pathological non-IID (Sec. V-B): each device sees only a subset of classes
+  ("device A trains on 50 samples from class 0 and 50 from class 1 while
+  device B trains on 50 from class 7 and 50 from class 8").
+Dirichlet(alpha) is the standard in-between used by the federated literature.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def iid_partition(
+    x: np.ndarray, y: np.ndarray, num_peers: int, *, seed: int = 0
+) -> list[tuple[np.ndarray, np.ndarray]]:
+    rng = np.random.default_rng(seed)
+    idx = rng.permutation(len(x))
+    n_per = len(x) // num_peers
+    return [
+        (x[idx[k * n_per : (k + 1) * n_per]], y[idx[k * n_per : (k + 1) * n_per]])
+        for k in range(num_peers)
+    ]
+
+
+def pathological_partition(
+    x: np.ndarray,
+    y: np.ndarray,
+    peer_classes: list[tuple[int, ...]],
+    *,
+    samples_per_class: int | None = None,
+    seed: int = 0,
+) -> list[tuple[np.ndarray, np.ndarray]]:
+    """Each peer k gets samples only from peer_classes[k].
+
+    samples_per_class=None takes *all* samples of that class (Figs. 4-6 use
+    "all samples from classes ..."); an int takes that many (Fig. 3 uses 50).
+    """
+    rng = np.random.default_rng(seed)
+    out = []
+    for classes in peer_classes:
+        xs, ys = [], []
+        for c in classes:
+            idx = np.nonzero(y == c)[0]
+            idx = rng.permutation(idx)
+            if samples_per_class is not None:
+                idx = idx[:samples_per_class]
+            xs.append(x[idx])
+            ys.append(y[idx])
+        xk, yk = np.concatenate(xs), np.concatenate(ys)
+        perm = rng.permutation(len(xk))
+        out.append((xk[perm], yk[perm]))
+    return out
+
+
+def dirichlet_partition(
+    x: np.ndarray, y: np.ndarray, num_peers: int, *, alpha: float = 0.5, seed: int = 0
+) -> list[tuple[np.ndarray, np.ndarray]]:
+    rng = np.random.default_rng(seed)
+    classes = np.unique(y)
+    peer_idx: list[list[int]] = [[] for _ in range(num_peers)]
+    for c in classes:
+        idx = rng.permutation(np.nonzero(y == c)[0])
+        props = rng.dirichlet([alpha] * num_peers)
+        cuts = (np.cumsum(props) * len(idx)).astype(int)[:-1]
+        for k, part in enumerate(np.split(idx, cuts)):
+            peer_idx[k].extend(part.tolist())
+    out = []
+    for k in range(num_peers):
+        sel = rng.permutation(np.asarray(peer_idx[k], dtype=int))
+        out.append((x[sel], y[sel]))
+    return out
+
+
+def data_sizes(parts: list[tuple[np.ndarray, np.ndarray]]) -> np.ndarray:
+    return np.asarray([len(p[0]) for p in parts], dtype=np.int64)

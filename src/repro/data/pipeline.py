@@ -1,0 +1,72 @@
+"""Peer-stacked batch pipeline for the stacked P2P runtime.
+
+Produces per-round batches of shape (T, K, B, ...) — step-major, then peer —
+matching ``repro.core.p2p.local_phase``.  Each peer cycles through its own
+local dataset with per-peer reshuffling at epoch boundaries (mini-batch SGD
+as in the paper: B=10, one epoch = n_k/B iterations).
+"""
+from __future__ import annotations
+
+from typing import Iterator
+
+import numpy as np
+
+
+class PeerBatcher:
+    """Cyclic per-peer mini-batch sampler over heterogeneous local datasets."""
+
+    def __init__(
+        self,
+        parts: list[tuple[np.ndarray, np.ndarray]],
+        batch_size: int,
+        *,
+        seed: int = 0,
+        reshuffle: bool = True,
+    ):
+        self.parts = parts
+        self.b = batch_size
+        self.reshuffle = reshuffle
+        self.rngs = [np.random.default_rng(seed + 7 * k) for k in range(len(parts))]
+        self.orders = [rng.permutation(len(p[0])) for rng, p in zip(self.rngs, parts)]
+        self.cursors = [0] * len(parts)
+
+    @property
+    def num_peers(self) -> int:
+        return len(self.parts)
+
+    def _next_indices(self, k: int) -> np.ndarray:
+        n = len(self.parts[k][0])
+        if n < self.b:
+            # sample with replacement when the local set is tiny
+            return self.rngs[k].integers(0, n, size=self.b)
+        if self.cursors[k] + self.b > n:
+            self.cursors[k] = 0
+            if self.reshuffle:
+                self.orders[k] = self.rngs[k].permutation(n)
+        sel = self.orders[k][self.cursors[k] : self.cursors[k] + self.b]
+        self.cursors[k] += self.b
+        return sel
+
+    def round_batches(self, local_steps: int) -> tuple[np.ndarray, np.ndarray]:
+        """Batches for one round: (x (T,K,B,F), y (T,K,B))."""
+        xs, ys = [], []
+        for _t in range(local_steps):
+            bx, by = [], []
+            for k in range(self.num_peers):
+                sel = self._next_indices(k)
+                bx.append(self.parts[k][0][sel])
+                by.append(self.parts[k][1][sel])
+            xs.append(np.stack(bx))
+            ys.append(np.stack(by))
+        return np.stack(xs), np.stack(ys)
+
+    def rounds(self, num_rounds: int, local_steps: int) -> Iterator[tuple[np.ndarray, np.ndarray]]:
+        for _ in range(num_rounds):
+            yield self.round_batches(local_steps)
+
+
+def global_to_peer_batch(x: np.ndarray, num_peers: int) -> np.ndarray:
+    """Split a global batch along axis 0 into a leading peer axis."""
+    b = x.shape[0]
+    assert b % num_peers == 0, f"global batch {b} not divisible by {num_peers} peers"
+    return x.reshape(num_peers, b // num_peers, *x.shape[1:])

@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: fused gossip mixing + affinity-bias update.
+
+The paper's hot op is memory-bound: each consensus step reads the peer's own
+parameters plus D neighbor parameter sets and must produce both the mixed
+parameters (Eq. 4) and the affinity bias d (Sec. IV-A).  Unfused, that is two
+passes over the D+1 tensors (mix, then d) = 2(D+1) reads + 2 writes; fused it
+is one pass = (D+1) reads + 2 writes, per tile, straight through VMEM.
+
+Layout: parameters are flattened and reshaped to (R, 128) lanes; the grid
+tiles R.  Neighbor tensors arrive as one (D, R, 128) array so a single
+BlockSpec streams all neighbors for the tile.  Mixing weights are tiny and
+live in VMEM whole.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+DEFAULT_BLOCK_ROWS = 256  # 256 x 128 f32 = 128 KiB per operand tile
+
+
+def _kernel(x_ref, nbrs_ref, w_self_ref, w_nbr_ref, beta_ref, inv_t_ref,
+            mixed_ref, d_ref):
+    x = x_ref[...].astype(jnp.float32)  # (BR, 128)
+    nbrs = nbrs_ref[...].astype(jnp.float32)  # (D, BR, 128)
+    w_self = w_self_ref[0]
+    w_nbr = w_nbr_ref[...]  # (D,)
+    beta = beta_ref[...]  # (D,)
+    inv_t = inv_t_ref[0]
+
+    # One pass over the neighbor tensors computes both outputs.
+    mixed = w_self * x + jnp.einsum("d,drl->rl", w_nbr, nbrs)
+    nbr_avg = jnp.einsum("d,drl->rl", beta, nbrs)
+    mixed_ref[...] = mixed.astype(mixed_ref.dtype)
+    d_ref[...] = ((nbr_avg - x) * inv_t).astype(d_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def consensus_mix_2d(
+    x: jax.Array,  # (R, 128)
+    nbrs: jax.Array,  # (D, R, 128)
+    w_self: jax.Array,  # scalar
+    w_nbr: jax.Array,  # (D,)
+    beta: jax.Array,  # (D,)
+    inv_t: jax.Array,  # scalar: 1 / local_steps
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    r, lane = x.shape
+    d = nbrs.shape[0]
+    assert lane == LANE and nbrs.shape[1:] == (r, LANE)
+    br = min(block_rows, r)
+    assert r % br == 0, f"rows {r} not divisible by block {br}"
+
+    grid = (r // br,)
+    out_shape = (
+        jax.ShapeDtypeStruct((r, LANE), x.dtype),
+        jax.ShapeDtypeStruct((r, LANE), x.dtype),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((d, br, LANE), lambda i: (0, i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((br, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((br, LANE), lambda i: (i, 0)),
+        ],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(x, nbrs, w_self.reshape(1), w_nbr, beta, inv_t.reshape(1))

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the fused gossip + affinity update.
+
+For one peer k with D neighbors:
+    mixed = w_self * x + sum_d w_nbr[d] * nbrs[d]           (Eq. 4, one row)
+    d     = (sum_d beta[d] * nbrs[d] - x) / T               (Sec. IV-A)
+All accumulation in f32; outputs cast back to the input dtype.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def consensus_mix_ref(x, nbrs, w_self, w_nbr, beta, local_steps: int):
+    """x: (N,); nbrs: (D, N); w_self: scalar; w_nbr, beta: (D,)."""
+    xf = x.astype(jnp.float32)
+    nf = nbrs.astype(jnp.float32)
+    mixed = w_self.astype(jnp.float32) * xf + jnp.einsum(
+        "d,dn->n", w_nbr.astype(jnp.float32), nf
+    )
+    nbr_avg = jnp.einsum("d,dn->n", beta.astype(jnp.float32), nf)
+    d_bias = (nbr_avg - xf) / local_steps
+    return mixed.astype(x.dtype), d_bias.astype(x.dtype)

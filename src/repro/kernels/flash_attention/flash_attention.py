@@ -1,0 +1,138 @@
+"""Pallas TPU flash-attention forward (causal / sliding-window).
+
+Canonical TPU tiling: grid (batch*heads, n_q_blocks, n_kv_blocks) with the KV
+block dimension innermost (sequential on TPU), online-softmax statistics in
+VMEM scratch that persist across KV steps:
+
+    m   (BQ, 1)  running row max
+    l   (BQ, 1)  running denominator
+    acc (BQ, D)  unnormalized context accumulator
+
+Q/K/V tiles stream HBM->VMEM per BlockSpec; the (BQ, BK) score tile lives
+only in VMEM/VREGs — the S x S matrix is never materialized, so prefill_32k
+attention is O(S) memory.  Fully-masked KV blocks (beyond the causal frontier
+or behind the sliding window) are skipped with pl.when.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale, block_q, block_k, causal, window, n_kv):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Block-level mask culling: run the block only if any (q, k) pair is live.
+    run = True
+    if causal:
+        run = jnp.asarray(k_start <= q_start + block_q - 1)
+    if window is not None:
+        # newest visible k for the oldest q row in this tile:
+        run = jnp.logical_and(run, k_start + block_k - 1 >= q_start - window + 1)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)  # (BQ, D)
+        k = k_ref[0].astype(jnp.float32)  # (BK, D)
+        v = v_ref[0].astype(jnp.float32)  # (BK, D)
+        scores = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (BQ, BK)
+
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+        mask = jnp.ones_like(scores, dtype=jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= (qpos - kpos) < window
+        scores = jnp.where(mask, scores, NEG_INF)
+
+        m_prev = m_ref[...]  # (BQ, 1)
+        m_cur = jnp.max(scores, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(scores - m_new)  # (BQ, BK)
+        alpha = jnp.exp(m_prev - m_new)  # (BQ, 1)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        l = l_ref[...]
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret", "scale"),
+)
+def flash_attention(
+    q: jax.Array,  # (B, H, S, D)
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    b, h, s, d = q.shape
+    scale = scale if scale is not None else d**-0.5
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    n_q, n_kv = s // block_q, s // block_k
+
+    qf = q.reshape(b * h, s, d)
+    kf = k.reshape(b * h, s, d)
+    vf = v.reshape(b * h, s, d)
+
+    kernel = functools.partial(
+        _kernel,
+        scale=scale,
+        block_q=block_q,
+        block_k=block_k,
+        causal=causal,
+        window=window,
+        n_kv=n_kv,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),  # m: running max
+            pltpu.VMEM((block_q, 1), jnp.float32),  # l: running denom
+            pltpu.VMEM((block_q, d), jnp.float32),  # acc
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, d)

@@ -1,0 +1,38 @@
+"""Public attention op: GQA handling, dtype plumbing, ref/pallas dispatch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def gqa_flash_attention(
+    q: jax.Array,  # (B, S, H, D)
+    k: jax.Array,  # (B, S, Kh, D)
+    v: jax.Array,  # (B, S, Kh, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    impl: str = "pallas",
+    interpret: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+) -> jax.Array:
+    """Returns (B, S, H, D).  KV heads are expanded to Q heads (GQA)."""
+    b, s, h, d = q.shape
+    kh = k.shape[2]
+    assert h % kh == 0
+    rep = h // kh
+    qt = q.transpose(0, 2, 1, 3)
+    kt = jnp.repeat(k.transpose(0, 2, 1, 3), rep, axis=1)
+    vt = jnp.repeat(v.transpose(0, 2, 1, 3), rep, axis=1)
+    if impl == "pallas":
+        out = flash_attention(
+            qt, kt, vt, causal=causal, window=window,
+            block_q=block_q, block_k=block_k, interpret=interpret,
+        )
+    else:
+        out = attention_ref(qt, kt, vt, causal=causal, window=window)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for blockwise (flash) attention.
+
+Plain materialized-scores attention with causal and sliding-window masking,
+f32 softmax.  Shapes: q/k/v (B, H, S, D) — GQA expansion happens in ops.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    s = q.shape[-2]
+    scale = scale if scale is not None else q.shape[-1] ** -0.5
+    scores = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    qi = jnp.arange(s)[:, None]
+    ki = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= ki <= qi
+    if window is not None:
+        mask &= (qi - ki) < window
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,15 @@
+"""Public SSD op with ref/pallas dispatch."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.mamba2.mamba2 import ssd_chunked
+from repro.kernels.mamba2.ref import ssd_ref
+
+
+def ssd(x, b, c, dt, a, *, impl: str = "pallas", chunk: int = 64, interpret: bool = True):
+    """x (B,T,H,P), b/c (B,T,H,N), dt (B,T,H), a (H,) -> y (B,T,H,P)."""
+    if impl == "pallas":
+        return ssd_chunked(x, b, c, dt, a, chunk=chunk, interpret=interpret)
+    y, _ = ssd_ref(x, b, c, dt, a)
+    return y

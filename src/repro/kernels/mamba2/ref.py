@@ -1,0 +1,42 @@
+"""Sequential oracle for the Mamba2 SSD recurrence (post-projection core).
+
+Per head, state S in R^{P x N}, scalar decay per head/step:
+    S_t = exp(dt_t * A) * S_{t-1} + (dt_t * x_t) B_t^T
+    y_t = S_t C_t                                  (current state, decay-then-add)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, b, c, dt, a, initial_state=None):
+    """x: (B,T,H,P); b,c: (B,T,H,N); dt: (B,T,H); a: (H,) negative.
+
+    Returns (y (B,T,H,P), final state (B,H,P,N))."""
+    bs = x.shape[0]
+    h, p = x.shape[2], x.shape[3]
+    n = b.shape[3]
+    xf, bf, cf = (t.astype(jnp.float32) for t in (x, b, c))
+    dtf = dt.astype(jnp.float32)
+    s0 = (
+        jnp.zeros((bs, h, p, n), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+
+    def step(s, inp):
+        xt, bt, ct, dtt = inp
+        decay = jnp.exp(dtt * a)[..., None, None]
+        s = s * decay + (dtt[..., None] * xt)[..., None] * bt[..., None, :]
+        yt = jnp.einsum("bhpn,bhn->bhp", s, ct)
+        return s, yt
+
+    inps = (
+        xf.transpose(1, 0, 2, 3),
+        bf.transpose(1, 0, 2, 3),
+        cf.transpose(1, 0, 2, 3),
+        dtf.transpose(1, 0, 2),
+    )
+    s_fin, ys = jax.lax.scan(step, s0, inps)
+    return ys.transpose(1, 0, 2, 3), s_fin

@@ -1,0 +1,25 @@
+"""Public WKV6 op with ref/pallas dispatch."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.rwkv6.ref import wkv6_ref
+from repro.kernels.rwkv6.rwkv6 import wkv6_chunked
+
+
+def wkv6(
+    r: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    logdecay: jax.Array,
+    u: jax.Array,
+    *,
+    impl: str = "pallas",
+    chunk: int = 16,
+    interpret: bool = True,
+) -> jax.Array:
+    """(B, T, H, dk) x4 + u (H, dk) -> (B, T, H, dk)."""
+    if impl == "pallas":
+        return wkv6_chunked(r, k, v, logdecay, u, chunk=chunk, interpret=interpret)
+    out, _ = wkv6_ref(r, k, v, logdecay, u)
+    return out

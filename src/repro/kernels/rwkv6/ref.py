@@ -1,0 +1,35 @@
+"""Sequential oracle for the RWKV6 (Finch) WKV recurrence.
+
+Per head, state S in R^{dk x dv}:
+    o_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(exp(logdecay_t)) S_{t-1} + k_t v_t^T
+with data-dependent per-channel log-decays (<= 0).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, logdecay, u, initial_state=None):
+    """r/k/v/logdecay: (B, T, H, dk); u: (H, dk). Returns (o (B,T,H,dk), S)."""
+    b, t, h, dk = r.shape
+    rf, kf, vf = (x.astype(jnp.float32) for x in (r, k, v))
+    ld = logdecay.astype(jnp.float32)
+    s0 = (
+        jnp.zeros((b, h, dk, dk), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+
+    def step(s, inp):
+        rt, kt, vt, ldt = inp  # (B, H, dk)
+        ot = jnp.einsum("bhi,bhij->bhj", rt, s) + jnp.einsum(
+            "bhi,bhi,bhj->bhj", rt, u[None] * kt, vt
+        )
+        s = jnp.exp(ldt)[..., None] * s + kt[..., None] * vt[..., None, :]
+        return s, ot
+
+    inps = tuple(x.transpose(1, 0, 2, 3) for x in (rf, kf, vf, ld))
+    s_fin, os = jax.lax.scan(step, s0, inps)
+    return os.transpose(1, 0, 2, 3), s_fin

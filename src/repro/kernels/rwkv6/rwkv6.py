@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: chunked RWKV6 WKV with data-dependent per-channel decay.
+
+Grid (B*H, n_chunks); the chunk dimension is innermost (sequential on TPU),
+so the (dk, dv) state lives in VMEM scratch across chunks.  Per chunk Q:
+
+  intra-chunk:  att3[t,s,i] = r[t,i] k[s,i] exp(cum[t,i] - cum[s,i]), s < t
+                y_t  = sum_s (sum_i att3) v_s  + (r_t . (u*k_t)) v_t
+  inter-chunk:  y_t += (r_t * exp(cum_t)) @ S
+  state:        S    = exp(cum_last) * S + (k * exp(cum_last - cum))^T @ v
+
+All decay exponents are differences cum_t - cum_s with t >= s of non-positive
+log-decays => every factor <= 1: no overflow for any decay magnitude.  The
+(Q, Q, dk) pairwise tensor is the VMEM working set — Q=16, dk=64 -> 64 KiB —
+exactly the tiling the chunk-scan jnp fallback uses (repro/models/ssm.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, ld_ref, u_ref, o_ref, s_ref, *, chunk, n_chunks):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0].astype(jnp.float32)  # (Q, dk)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)  # (Q, dv)
+    ld = ld_ref[0].astype(jnp.float32)  # (Q, dk) log-decay <= 0
+    u = u_ref[0].astype(jnp.float32)  # (1, dk)
+
+    cum = jnp.cumsum(ld, axis=0)  # (Q, dk), inclusive
+    cum_ex = cum - ld  # exclusive: RWKV applies decay AFTER the read (S_{t-1})
+    q = r.shape[0]
+
+    # intra-chunk pairwise (strictly lower-triangular in (t, s)):
+    # contribution s -> t decays through steps s+1..t-1 = exp(cum_ex_t - cum_s)
+    pair = cum_ex[:, None, :] - cum[None, :, :]  # (Q, Q, dk)
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    tri = (s_idx < t_idx)[..., None]
+    att = jnp.sum(jnp.where(tri, r[:, None, :] * k[None, :, :] * jnp.exp(pair), 0.0), axis=-1)
+    y = jax.lax.dot_general(att, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    # current-step bonus
+    diag = jnp.sum(r * (u * k), axis=-1, keepdims=True)  # (Q, 1)
+    y = y + diag * v
+    # inter-chunk contribution from carried state (decays steps c0..t-1)
+    y = y + jax.lax.dot_general(r * jnp.exp(cum_ex), s_ref[...],
+                                (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    o_ref[0] = y.astype(o_ref.dtype)
+
+    # state update
+    rem = jnp.exp(cum[-1:] - cum)  # (Q, dk), <= 1
+    s_ref[...] = s_ref[...] * jnp.exp(cum[-1])[:, None] + jax.lax.dot_general(
+        (k * rem), v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6_chunked(
+    r: jax.Array,  # (B, T, H, dk)
+    k: jax.Array,
+    v: jax.Array,
+    logdecay: jax.Array,  # (B, T, H, dk), <= 0
+    u: jax.Array,  # (H, dk)
+    *,
+    chunk: int = 16,
+    interpret: bool = True,
+) -> jax.Array:
+    b, t, h, dk = r.shape
+    chunk = min(chunk, t)
+    assert t % chunk == 0, (t, chunk)
+    n_chunks = t // chunk
+
+    def flat(x):  # (B*H, T, dk)
+        return x.transpose(0, 2, 1, 3).reshape(b * h, t, dk)
+
+    rf, kf, vf, ldf = map(flat, (r, k, v, logdecay))
+    u_bh = jnp.tile(u, (b, 1)).reshape(b * h, 1, dk)
+
+    kernel = functools.partial(_kernel, chunk=chunk, n_chunks=n_chunks)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, dk), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, dk), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, dk), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, dk), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1, dk), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, dk), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, t, dk), r.dtype),
+        scratch_shapes=[pltpu.VMEM((dk, dk), jnp.float32)],
+        interpret=interpret,
+    )(rf, kf, vf, ldf, u_bh)
+    return out.reshape(b, h, t, dk).transpose(0, 2, 1, 3)

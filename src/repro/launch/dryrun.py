@@ -1,0 +1,109 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count at first init.
+# The 512 placeholder host devices exist ONLY for this dry-run entry point;
+# smoke tests and benchmarks see the 1 real CPU device.
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+
+from repro.configs import ARCHITECTURES, INPUT_SHAPES  # noqa: E402
+from repro.launch import dryrun_lib, mesh as mesh_lib, roofline  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description="Multi-pod dry-run: lower+compile every case")
+    ap.add_argument("--arch", default="all", help="architecture id or 'all'")
+    ap.add_argument("--shape", default="all", help="input shape or 'all'")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--optimizer", default="sgdm", choices=["sgdm", "adamw"])
+    ap.add_argument("--algorithm", default="p2pl_affinity",
+                    choices=["p2pl_affinity", "local_dsgd"])
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--markdown", default="")
+    ap.add_argument("--dump-hlo", default="", help="dir to dump per-case HLO text")
+    ap.add_argument("--cache-layout", default="auto", choices=["auto", "heads", "seq"],
+                    help="KV-cache sharding: auto = heads for prefill, seq for decode")
+    ap.add_argument("--consensus-impl", default="einsum", choices=["einsum", "psum"],
+                    help="gossip lowering across the pod axis")
+    ap.add_argument("--seq-parallel", action="store_true",
+                    help="shard the residual seq dim over `model` (Megatron SP)")
+    args = ap.parse_args(argv)
+
+    archs = list(ARCHITECTURES) if args.arch == "all" else args.arch.split(",")
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("16x16", False))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("2x16x16", True))
+
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    if args.dump_hlo:
+        os.makedirs(args.dump_hlo, exist_ok=True)
+
+    results, reports = [], []
+    n_fail = 0
+    for mesh_name, multi in meshes:
+        mesh = mesh_lib.make_production_mesh(multi_pod=multi)
+        for arch in archs:
+            for shape in shapes:
+                dump = (
+                    os.path.join(args.dump_hlo, f"{arch}_{shape}_{mesh_name}.hlo")
+                    if args.dump_hlo
+                    else None
+                )
+                t0 = time.time()
+                res = dryrun_lib.run_case(
+                    arch, shape, mesh,
+                    multi_pod=multi,
+                    optimizer=args.optimizer,
+                    algorithm=args.algorithm,
+                    mesh_name=mesh_name,
+                    dump_hlo=dump,
+                    cache_layout=args.cache_layout,
+                    consensus_impl=args.consensus_impl,
+                    seq_parallel=args.seq_parallel,
+                )
+                dt = time.time() - t0
+                if res.ok:
+                    r = res.report
+                    print(
+                        f"[ok]   {arch:22s} {shape:12s} {mesh_name:8s} "
+                        f"{r.step_kind:8s} comp={roofline.fmt_seconds(r.compute_s)} "
+                        f"mem={roofline.fmt_seconds(r.memory_s)} "
+                        f"coll={roofline.fmt_seconds(r.collective_s)} "
+                        f"dom={r.dominant} ({dt:.1f}s)",
+                        flush=True,
+                    )
+                    reports.append(r)
+                    if res.consensus_report:
+                        reports.append(res.consensus_report)
+                else:
+                    n_fail += 1
+                    print(f"[FAIL] {arch:22s} {shape:12s} {mesh_name}\n{res.error}", flush=True)
+                results.append(
+                    {
+                        "arch": arch, "shape": shape, "mesh": mesh_name,
+                        "ok": res.ok, "seconds": res.seconds,
+                        "report": res.report.to_dict() if res.report else None,
+                        "consensus": res.consensus_report.to_dict()
+                        if res.consensus_report
+                        else None,
+                        "error": res.error,
+                    }
+                )
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+
+    if args.markdown:
+        with open(args.markdown, "w") as f:
+            f.write(roofline.markdown_table(reports))
+    print(f"\n{len(results) - n_fail}/{len(results)} cases compiled", flush=True)
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

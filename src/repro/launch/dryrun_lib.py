@@ -1,0 +1,349 @@
+"""Dry-run core: lower + compile every (arch x input-shape x mesh) case.
+
+No arrays are ever allocated: parameters/optimizer/caches/batches are
+ShapeDtypeStruct stand-ins from ``jax.eval_shape``; ``jit(...).lower(...)``
+then ``.compile()`` proves the sharding config is coherent and yields the
+cost/memory analyses the roofline reads.
+
+Used by launch/dryrun.py (512 placeholder devices) and by the small-mesh
+sharding tests (8 devices).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+import traceback
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, for_shape, get_config
+from repro.launch import mesh as mesh_lib
+from repro.launch import roofline as roofline_lib
+from repro.launch import steps as steps_lib
+from repro.models import build_model
+from repro.sharding import logical, specs
+from repro import optim as optim_lib
+
+PyTree = Any
+
+ACTIVATION_RULES = {
+    "batch": "data",
+    "seq": None,
+    # the residual stream's seq dim; "model" = Megatron-style sequence
+    # parallelism (AG before QKV/up-proj, RS after out-proj — half the wire
+    # bytes of the all-reduce it replaces)
+    "residual_seq": None,
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",
+    "expert_cap": None,
+    "expert_group": "data",
+    "kv_lora": None,
+    "layers": None,
+    "conv": None,
+    "state": None,
+}
+
+
+def make_optimizer(name: str) -> optim_lib.Optimizer:
+    if name == "sgdm":
+        return optim_lib.sgd(0.01, momentum=0.9)  # the paper's local update rule
+    if name == "adamw":
+        return optim_lib.adamw(3e-4)
+    raise ValueError(f"unknown optimizer {name!r}")
+
+
+def _stack(tree: PyTree, k: int) -> PyTree:
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct((k,) + s.shape, s.dtype), tree)
+
+
+def _named(mesh, ptree: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), ptree, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def _shardings(mesh, pspecs: PyTree, sds: PyTree) -> PyTree:
+    """sanitize (divisibility) + wrap in NamedSharding."""
+    return _named(mesh, specs.sanitize_pspecs(pspecs, sds, mesh))
+
+
+@dataclasses.dataclass
+class CaseResult:
+    arch: str
+    shape: str
+    mesh: str
+    ok: bool
+    seconds: float
+    report: Optional[roofline_lib.Roofline] = None
+    consensus_report: Optional[roofline_lib.Roofline] = None
+    error: str = ""
+
+
+def prepare_case(arch: str, shape_name: str, *, router_groups: int = 16):
+    shape_cfg = INPUT_SHAPES[shape_name]
+    cfg = for_shape(get_config(arch), shape_cfg)
+    if cfg.moe is not None:
+        cfg = cfg.replace(
+            moe=dataclasses.replace(cfg.moe, router_groups=router_groups)
+        )
+    return cfg, shape_cfg
+
+
+def run_case(
+    arch: str,
+    shape_name: str,
+    mesh,
+    *,
+    multi_pod: bool = False,
+    optimizer: str = "sgdm",
+    algorithm: str = "p2pl_affinity",
+    mesh_name: Optional[str] = None,
+    with_consensus: bool = True,
+    dump_hlo: Optional[str] = None,
+    cache_layout: str = "auto",
+    consensus_impl: str = "einsum",
+    seq_parallel: bool = False,
+) -> CaseResult:
+    """cache_layout="auto" picks per phase: prefill writes every position, so
+    the position-sharded ("seq") cache would scatter across shards — use
+    "heads" there; decode reads the whole cache once per token — "seq" turns
+    per-step cache all-gathers into a local partial-softmax (measured up to
+    1500x on the collective term)."""
+    t0 = time.time()
+    mesh_name = mesh_name or "x".join(str(v) for v in mesh.shape.values())
+    try:
+        data_ax = mesh.shape.get("data", 1)
+        cfg, shape_cfg = prepare_case(arch, shape_name, router_groups=data_ax)
+        if cache_layout == "auto":
+            cache_layout = "seq" if shape_cfg.kind == "decode" else "heads"
+        model = build_model(cfg)
+        chips = mesh_lib.num_chips(mesh)
+        peers = mesh.shape.get("pod", 1)
+        fsdp = specs.should_fsdp(cfg.param_count())
+        peer_axis = "pod" if multi_pod else None
+        eta_d = 1.0 if algorithm == "p2pl_affinity" else 0.0
+        opt = make_optimizer(optimizer)
+
+        params_sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        params_unstacked_for_consensus = params_sds
+        param_bytes_total = sum(
+            s.size * s.dtype.itemsize for s in jax.tree.leaves(params_sds)
+        ) * max(peers, 1)
+
+        p_specs = specs.param_pspecs(params_sds, fsdp=fsdp, peer_axis=peer_axis)
+        if multi_pod:
+            params_sds = _stack(params_sds, peers)
+
+        rules_table = dict(ACTIVATION_RULES)
+        if seq_parallel and shape_cfg.kind != "decode":
+            rules_table["residual_seq"] = "model"
+        with logical.rules(rules_table, mesh):
+            if shape_cfg.kind == "train":
+                lowered = _lower_train(
+                    model, cfg, shape_cfg, mesh, multi_pod, peers, opt, eta_d,
+                    params_sds, p_specs, fsdp,
+                )
+                step_kind = "train"
+            elif shape_cfg.kind == "prefill":
+                lowered = _lower_prefill(
+                    model, cfg, shape_cfg, mesh, multi_pod, peers, params_sds, p_specs,
+                    cache_layout,
+                )
+                step_kind = "prefill"
+            else:
+                lowered = _lower_decode(
+                    model, cfg, shape_cfg, mesh, multi_pod, peers, params_sds, p_specs,
+                    cache_layout,
+                )
+                step_kind = "decode"
+
+            compiled = lowered.compile()
+            cost = compiled.cost_analysis()
+            memstats = compiled.memory_analysis()
+            hlo = compiled.as_text()
+            if dump_hlo:
+                with open(dump_hlo, "w") as f:
+                    f.write(hlo)
+
+            report = roofline_lib.build_report(
+                arch=arch,
+                shape=shape_name,
+                mesh_name=mesh_name,
+                chips=chips,
+                step_kind=step_kind,
+                cost=cost,
+                memstats=memstats,
+                hlo_text=hlo,
+                model_flops_total=roofline_lib.model_flops(cfg, shape_cfg, peers=peers),
+                param_bytes_total=param_bytes_total,
+                extra={"fsdp": fsdp, "algorithm": algorithm, "optimizer": optimizer,
+                       "cache_layout": cache_layout},
+            )
+
+            consensus_report = None
+            if multi_pod and with_consensus and shape_cfg.kind == "train":
+                # consensus is pure parameter-space: shard its trees maximally
+                # (FSDP over `data` regardless of the train-path threshold —
+                # wire scales with the replicated fraction; §Perf P1 it2/it3)
+                cons_specs = specs.param_pspecs(
+                    params_unstacked_for_consensus, fsdp=True, peer_axis=peer_axis
+                )
+                consensus_report = _lower_consensus(
+                    arch, shape_name, mesh, mesh_name, chips, peers,
+                    params_sds, cons_specs, eta_d, param_bytes_total,
+                    impl=consensus_impl,
+                )
+
+        return CaseResult(
+            arch, shape_name, mesh_name, True, time.time() - t0,
+            report=report, consensus_report=consensus_report,
+        )
+    except Exception:  # noqa: BLE001 — record and continue the sweep
+        return CaseResult(
+            arch, shape_name, mesh_name, False, time.time() - t0,
+            error=traceback.format_exc(limit=20),
+        )
+
+
+def _lower_train(model, cfg, shape_cfg, mesh, multi_pod, peers, opt, eta_d,
+                 params_sds, p_specs, fsdp):
+    b_per_peer = max(shape_cfg.global_batch // max(peers, 1), 1)
+    batch_sds = model.batch_specs(b_per_peer, shape_cfg.seq_len)
+    d_sds = params_sds  # affinity bias tree mirrors params (incl. peer stack)
+
+    # optimizer state mirrors the per-peer params: build specs unstacked,
+    # then stack the shapes (param_pspecs' peer_axis adds the prefix only).
+    peer_axis = "pod" if multi_pod else None
+    params_unstacked = (
+        jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype), params_sds)
+        if multi_pod
+        else params_sds
+    )
+    opt_unstacked = jax.eval_shape(opt.init, params_unstacked)
+    opt_specs = specs.param_pspecs(opt_unstacked, fsdp=fsdp, peer_axis=peer_axis)
+    opt_sds = _stack(opt_unstacked, peers) if multi_pod else opt_unstacked
+    b_specs = specs.batch_pspecs(batch_sds, peer_axis=peer_axis)
+    if multi_pod:
+        batch_sds = _stack(batch_sds, peers)
+
+    if multi_pod:
+        step_fn = steps_lib.make_multipod_train_step(model, opt, eta_d=eta_d)
+    else:
+        step_fn = steps_lib.make_train_step(model, opt, eta_d=eta_d)
+
+    p_sh = _shardings(mesh, p_specs, params_sds)
+    o_sh = _shardings(mesh, opt_specs, opt_sds)
+    b_sh = _shardings(mesh, b_specs, batch_sds)
+    in_sh = (p_sh, o_sh, p_sh, b_sh, NamedSharding(mesh, P()))
+    out_sh = (p_sh, o_sh, NamedSharding(mesh, P()))
+    if multi_pod:
+        out_sh = (*out_sh[:2], NamedSharding(mesh, P("pod")))
+
+    step_sds = jax.ShapeDtypeStruct((), jnp.int32)
+    return jax.jit(step_fn, in_shardings=in_sh, out_shardings=out_sh).lower(
+        params_sds, opt_sds, d_sds, batch_sds, step_sds
+    )
+
+
+def _cache_for(model, cfg, b, s, multi_pod, peers, mesh, cache_layout="heads"):
+    cache_sds = jax.eval_shape(lambda: model.init_cache(b, s))
+    peer_axis = "pod" if multi_pod else None
+    c_specs = specs.cache_pspecs(
+        cache_sds, family=cfg.family, peer_axis=peer_axis, layout=cache_layout
+    )
+    if multi_pod:
+        cache_sds = _stack(cache_sds, peers)
+    return cache_sds, _shardings(mesh, c_specs, cache_sds)
+
+
+def _lower_prefill(model, cfg, shape_cfg, mesh, multi_pod, peers, params_sds, p_specs,
+                   cache_layout="heads"):
+    b_per_peer = max(shape_cfg.global_batch // max(peers, 1), 1)
+    batch_sds = model.batch_specs(b_per_peer, shape_cfg.seq_len)
+    peer_axis = "pod" if multi_pod else None
+    b_specs = specs.batch_pspecs(batch_sds, peer_axis=peer_axis)
+    cache_sds, c_sh = _cache_for(model, cfg, b_per_peer, shape_cfg.seq_len, multi_pod,
+                                 peers, mesh, cache_layout)
+    if multi_pod:
+        batch_sds = _stack(batch_sds, peers)
+        step_fn = jax.vmap(steps_lib.make_prefill_step(model), spmd_axis_name="pod")
+        tok_sh = NamedSharding(mesh, P("pod", "data"))
+    else:
+        step_fn = steps_lib.make_prefill_step(model)
+        tok_sh = NamedSharding(mesh, P("data"))
+
+    in_sh = (_shardings(mesh, p_specs, params_sds), _shardings(mesh, b_specs, batch_sds), c_sh)
+    out_sh = (tok_sh, c_sh)
+    return jax.jit(step_fn, in_shardings=in_sh, out_shardings=out_sh).lower(
+        params_sds, batch_sds, cache_sds
+    )
+
+
+def _lower_decode(model, cfg, shape_cfg, mesh, multi_pod, peers, params_sds, p_specs,
+                  cache_layout="heads"):
+    b_per_peer = max(shape_cfg.global_batch // max(peers, 1), 1)
+    cache_sds, c_sh = _cache_for(model, cfg, b_per_peer, shape_cfg.seq_len, multi_pod,
+                                 peers, mesh, cache_layout)
+    tok_shape = (peers, b_per_peer) if multi_pod else (b_per_peer,)
+    tok_sds = jax.ShapeDtypeStruct(tok_shape, jnp.int32)
+    tok_spec = P("pod", "data") if multi_pod else P("data")
+    tok_sh = NamedSharding(mesh, specs.sanitize_pspecs(tok_spec, tok_sds, mesh))
+
+    if multi_pod:
+        step_fn = steps_lib.make_multipod_serve_step(model)
+    else:
+        step_fn = steps_lib.make_serve_step(model)
+
+    in_sh = (_shardings(mesh, p_specs, params_sds), c_sh, tok_sh, tok_sh)
+    out_sh = (tok_sh, tok_sh, c_sh)
+    return jax.jit(step_fn, in_shardings=in_sh, out_shardings=out_sh).lower(
+        params_sds, cache_sds, tok_sds, tok_sds
+    )
+
+
+def _lower_consensus(arch, shape_name, mesh, mesh_name, chips, peers,
+                     params_sds, p_specs, eta_d, param_bytes_total, impl="einsum"):
+    """Lower the gossip step across the pod axis (complete graph, K=peers)."""
+    from repro.core import graph as graph_lib
+
+    g = graph_lib.build_graph("complete", peers)
+    w = graph_lib.mixing_matrix(g, "data_weighted", data_sizes=np.ones(peers))
+    beta = graph_lib.affinity_matrix(g)
+    if impl == "psum":
+        step_fn = steps_lib.make_consensus_step_psum(
+            peers, self_weight=float(w[0, 0]), peer_weight=float(w[0, 1]),
+            local_steps=60, use_affinity=eta_d != 0.0,
+        )
+    else:
+        step_fn = steps_lib.make_consensus_step(
+            w, beta, local_steps=60, use_affinity=eta_d != 0.0
+        )
+    sh = _shardings(mesh, p_specs, params_sds)
+    lowered = jax.jit(step_fn, in_shardings=(sh, sh), out_shardings=(sh, sh)).lower(
+        params_sds, params_sds
+    )
+    compiled = lowered.compile()
+    return roofline_lib.build_report(
+        arch=arch,
+        shape=shape_name,
+        mesh_name=mesh_name,
+        chips=chips,
+        step_kind="consensus",
+        cost=compiled.cost_analysis(),
+        memstats=compiled.memory_analysis(),
+        hlo_text=compiled.as_text(),
+        model_flops_total=0.0,
+        param_bytes_total=param_bytes_total,
+        extra={"note": "amortize collective term by 1/T (T=60 local steps)",
+               "impl": impl},
+    )

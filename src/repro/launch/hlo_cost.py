@@ -1,0 +1,315 @@
+"""HLO-text cost model with while-loop trip-count scaling.
+
+``compiled.cost_analysis()`` counts each op ONCE — ops inside a ``while`` body
+(i.e. everything under ``lax.scan``, which this framework uses for layer
+stacks and SSM chunk scans) are NOT multiplied by the trip count, so scanned
+models would be undercounted by ~num_layers x.  This module re-derives
+FLOPs / bytes / collective-wire-bytes from ``compiled.as_text()`` directly:
+
+1. split the module into computations,
+2. walk the call graph from ENTRY, assigning every computation an execution
+   multiplier (while bodies/conds: x trip count, parsed from the loop-bound
+   constant in the condition computation; fusions/calls: x1),
+3. per op: dot FLOPs from shapes + contracting dims; bytes = operand+result
+   shape bytes; collective wire bytes as in roofline.parse_collectives.
+
+Validated against closed-form expectations in tests/test_hlo_cost.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# header lines may contain nested tuple types in the params — just detect
+# "... -> ... {" and grab the leading name
+_COMP_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+_OPCODE_RE = re.compile(r"^((?:\([^=]*?\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+)?([a-z][\w\-]*)\(")
+_CALL_REFS = (
+    ("body=", re.compile(r"body=%?([\w\.\-]+)")),
+    ("condition=", re.compile(r"condition=%?([\w\.\-]+)")),
+    ("calls=", re.compile(r"calls=%?([\w\.\-]+)")),
+    ("to_apply=", re.compile(r"to_apply=%?([\w\.\-]+)")),
+    ("branch_computations=", re.compile(r"branch_computations=\{([^}]*)\}")),
+)
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_WIRE_FACTOR = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _shapes_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype in _DTYPE_BYTES:
+            total += _shape_elems(dims) * _DTYPE_BYTES[dtype]
+    return total
+
+
+_OPERANDS_RE = re.compile(r"%([\w\.\-]+)")
+
+
+@dataclasses.dataclass
+class Op:
+    opcode: str
+    line: str
+    name: str = ""
+    result_bytes: int = 0
+    result_shape: str = ""
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list
+    is_entry: bool = False
+
+
+_COMMENT_RE = re.compile(r"/\*[^*]*\*/")
+
+
+def parse_computations(hlo: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for raw in hlo.splitlines():
+        line = _COMMENT_RE.sub("", raw.rstrip())
+        stripped = line.strip()
+        if cur is None:
+            if stripped.endswith("{") and "->" in stripped:
+                m = _COMP_HEADER_RE.match(stripped)
+                if m:
+                    cur = Computation(m.group(2), [], is_entry=bool(m.group(1)))
+            continue
+        if stripped == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        mo = _OPCODE_RE.match(rhs)
+        if mo:
+            opcode = mo.group(2)
+        else:
+            head = rhs.split("(")[0].split()
+            opcode = head[-1] if head else ""
+        shape_str = mo.group(1) or "" if mo else ""
+        cur.ops.append(Op(opcode, line, name=name,
+                          result_bytes=_shapes_bytes(shape_str),
+                          result_shape=shape_str.strip()))
+    return comps
+
+
+def _refs(line: str) -> list[str]:
+    out = []
+    for _tag, rx in _CALL_REFS:
+        m = rx.search(line)
+        if not m:
+            continue
+        blob = m.group(1)
+        for part in blob.split(","):
+            part = part.strip().lstrip("%")
+            if part:
+                out.append(part)
+    return out
+
+
+def _const_value(op: Op):
+    m = re.search(r"constant\((-?\d+)\)", op.line)
+    return int(m.group(1)) if m else None
+
+
+def _trip_count(while_op: Op, cond: Computation | None, enclosing: Computation) -> int:
+    """Loop bound resolution chain:
+    (a) integer literal in the condition computation (constant-folded bounds),
+    (b) max s32 scalar constant among the while's init-tuple operands
+        (jax.lax.scan carries the bound as a tuple element),
+    (c) max leading dim of stacked (rank>=2) result tuple elements,
+    (d) 1."""
+    if cond is not None:
+        best = max((_const_value(op) or 0 for op in cond.ops if op.opcode == "constant"),
+                   default=0)
+        if best > 1:
+            return best
+    table = {op.name: op for op in enclosing.ops}
+    args = _OPERANDS_RE.findall(while_op.line.split("(", 1)[1].split(")")[0]) if "(" in while_op.line else []
+    best = 0
+    for a in args:
+        init = table.get(a)
+        if init is None:
+            continue
+        operands = []
+        if init.opcode == "tuple" and "(" in init.line:
+            operands = _OPERANDS_RE.findall(init.line.split("(", 1)[1].split(")")[0])
+        else:
+            operands = [a]
+        for ref in operands:
+            op = table.get(ref)
+            if op is not None and op.opcode == "constant" and "s32[]" in op.line:
+                v = _const_value(op)
+                if v:
+                    best = max(best, v)
+    if best > 1:
+        return best
+    dims = [
+        _first_shape_dims(m.group(0))
+        for m in _SHAPE_RE.finditer(while_op.result_shape)
+    ]
+    lead = max((d[0] for d in
+                (_first_shape_dims(f"{t}[{dd}]") for t, dd in _SHAPE_RE.findall(while_op.result_shape))
+                if d and len(d) >= 2), default=1)
+    del dims
+    return max(lead, 1)
+
+
+def _first_shape_dims(shape_str: str):
+    m = _SHAPE_RE.search(shape_str)
+    if not m or m.group(1) not in _DTYPE_BYTES:
+        return None
+    return [int(x) for x in m.group(2).split(",") if x]
+
+
+def _dot_flops(op: Op, table: dict) -> float:
+    """2 * prod(result dims) * prod(contracted dims of lhs)."""
+    result_dims = _first_shape_dims(op.result_shape)
+    if result_dims is None:
+        return 0.0
+    # operands are %-references; look their shapes up in the symbol table
+    paren = op.line.split("(", 1)[1] if "(" in op.line else ""
+    args = _OPERANDS_RE.findall(paren.split(")")[0])
+    if not args or args[0] not in table:
+        return 0.0
+    lhs_dims = _first_shape_dims(table[args[0]])
+    if lhs_dims is None:
+        return 0.0
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
+    contracted = 1
+    if m:
+        for idx in m.group(1).split(","):
+            if idx:
+                contracted *= lhs_dims[int(idx)]
+    res = 1
+    for d in result_dims:
+        res *= d
+    return 2.0 * res * contracted
+
+
+def _op_bytes(op: Op, table: dict) -> int:
+    """result bytes + operand bytes (via the symbol table)."""
+    total = op.result_bytes
+    if "(" in op.line:
+        paren = op.line.split("(", 1)[1].split(")")[0]
+        for ref in _OPERANDS_RE.findall(paren):
+            if ref in table:
+                total += _shapes_bytes(table[ref])
+    return total
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float
+    bytes_accessed: float
+    coll_wire_bytes: float
+    coll_by_kind: dict
+    loop_info: dict  # computation name -> multiplier
+
+
+def analyze(hlo: str) -> HloCost:
+    comps = parse_computations(hlo)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:  # fall back: biggest computation
+        entry = max(comps.values(), key=lambda c: len(c.ops))
+
+    # Two multipliers per computation: `mult` scales flops/collectives
+    # everywhere; `mult_mem` scales bytes and is NOT propagated into fusion
+    # bodies or reduce/scatter appliers — ops inside a fusion touch registers
+    # /VMEM, not HBM (the fusion callsite's operands+result carry the traffic).
+    mult: dict[str, float] = defaultdict(float)
+    mult_mem: dict[str, float] = defaultdict(float)
+    mult[entry.name] = 1.0
+    mult_mem[entry.name] = 1.0
+    queue = [entry.name]
+    seen_edges = set()
+    _FUSED_CALLERS = ("fusion", "reduce", "scatter", "sort", "map",
+                      "reduce-window", "select-and-scatter", "all-reduce",
+                      "reduce-scatter")
+    while queue:
+        name = queue.pop()
+        comp = comps.get(name)
+        if comp is None:
+            continue
+        m = mult[name]
+        mm = mult_mem[name]
+        for op in comp.ops:
+            refs = _refs(op.line)
+            if not refs:
+                continue
+            if op.opcode == "while":
+                bm = re.search(r"body=%?([\w\.\-]+)", op.line)
+                cm = re.search(r"condition=%?([\w\.\-]+)", op.line)
+                body = bm.group(1) if bm else None
+                cond = cm.group(1) if cm else None
+                trips = _trip_count(op, comps.get(cond), comp)
+                for r in (body, cond):
+                    if r and (name, r) not in seen_edges:
+                        mult[r] += m * trips
+                        mult_mem[r] += mm * trips
+                        seen_edges.add((name, r))
+                        queue.append(r)
+            else:
+                fused = op.opcode in _FUSED_CALLERS
+                for r in refs:
+                    if (name, r, op.opcode) in seen_edges:
+                        continue
+                    seen_edges.add((name, r, op.opcode))
+                    mult[r] += m
+                    if not fused:
+                        mult_mem[r] += mm
+                    queue.append(r)
+
+    flops = 0.0
+    bytes_acc = 0.0
+    coll = {k: {"count": 0.0, "wire_bytes": 0.0} for k in COLLECTIVES}
+    for name, comp in comps.items():
+        m = mult.get(name, 0.0)
+        if m <= 0:
+            continue
+        mm = mult_mem.get(name, 0.0)
+        table = {op.name: op.result_shape for op in comp.ops}
+        for op in comp.ops:
+            if op.opcode in ("dot", "dot-general", "convolution"):
+                flops += m * _dot_flops(op, table)
+            # skip pure bookkeeping ops for bytes
+            if mm > 0 and op.opcode not in ("parameter", "constant", "tuple",
+                                            "get-tuple-element", "bitcast"):
+                bytes_acc += mm * _op_bytes(op, table)
+            base = op.opcode[:-6] if op.opcode.endswith("-start") else op.opcode
+            if base in COLLECTIVES:
+                coll[base]["count"] += m
+                coll[base]["wire_bytes"] += m * op.result_bytes * _WIRE_FACTOR[base]
+    total_wire = sum(v["wire_bytes"] for v in coll.values())
+    return HloCost(
+        flops=flops,
+        bytes_accessed=bytes_acc,
+        coll_wire_bytes=total_wire,
+        coll_by_kind={k: v for k, v in coll.items() if v["count"]},
+        loop_info={k: v for k, v in mult.items() if v > 1.0},
+    )

@@ -1,0 +1,43 @@
+"""Production mesh construction (TPU v5e pods; host-device placeholders here).
+
+``make_production_mesh`` is a FUNCTION (never a module constant) so importing
+this module never touches jax device state.  The dry-run entry point sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; everything else (smoke tests, benches) sees the 1 real CPU device.
+
+Axis semantics:
+  pod   — the P2P *peer* axis at production scale: each pod is one paper
+          "device"; consensus collectives run only across this axis.
+  data  — intra-peer batch/FSDP axis.
+  model — intra-peer tensor/expert-parallel axis.
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e roofline constants (per chip), per the assignment.
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # B/s
+ICI_BW = 50e9  # B/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for CI-scale sharding tests (requires >= prod(shape) devices)."""
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def num_chips(mesh) -> int:
+    n = 1
+    for v in mesh.shape.values():
+        n *= v
+    return n

@@ -1,0 +1,126 @@
+"""Assemble EXPERIMENTS.md roofline/dry-run tables from sweep JSONs.
+
+    PYTHONPATH=src python -m repro.launch.report \
+        --baseline results/dryrun_single_baseline.json \
+        --opt results/dryrun_single_opt.json \
+        --multi results/dryrun_multi_opt.json --out results/tables.md
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.launch.roofline import fmt_seconds
+
+
+def _load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def _fmt_gib(b):
+    return f"{b/2**30:.2f}"
+
+
+def roofline_table(results, *, title):
+    out = [f"### {title}\n"]
+    out.append(
+        "| arch | shape | step | compute | memory | collective | dominant | "
+        "useful FLOPs | params/chip GiB | coll wire GiB/chip |"
+    )
+    out.append("|---|---|---|---|---|---|---|---|---|---|")
+    for r in results:
+        if not r["ok"]:
+            out.append(f"| {r['arch']} | {r['shape']} | FAILED | | | | | | | |")
+            continue
+        p = r["report"]
+        out.append(
+            f"| {p['arch']} | {p['shape']} | {p['step_kind']} "
+            f"| {fmt_seconds(p['compute_s'])} | {fmt_seconds(p['memory_s'])} "
+            f"| {fmt_seconds(p['collective_s'])} | **{p['dominant']}** "
+            f"| {p['useful_flop_ratio']:.2f} | {_fmt_gib(p['param_bytes_per_chip'])} "
+            f"| {_fmt_gib(p['coll_wire_bytes_per_chip'])} |"
+        )
+    return "\n".join(out) + "\n"
+
+
+def comparison_table(baseline, opt):
+    """Baseline vs optimized deltas for cases where they differ."""
+    base = {(r["arch"], r["shape"]): r for r in baseline if r["ok"]}
+    out = [
+        "| arch | shape | term | baseline | optimized | x |",
+        "|---|---|---|---|---|---|",
+    ]
+    for r in opt:
+        if not r["ok"]:
+            continue
+        key = (r["arch"], r["shape"])
+        if key not in base:
+            continue
+        b, o = base[key]["report"], r["report"]
+        for term in ("collective_s", "memory_s"):
+            bv, ov = b[term], o[term]
+            if bv > 0 and (bv / max(ov, 1e-12) >= 1.25 or ov / max(bv, 1e-12) >= 1.25):
+                out.append(
+                    f"| {r['arch']} | {r['shape']} | {term[:-2]} "
+                    f"| {fmt_seconds(bv)} | {fmt_seconds(ov)} "
+                    f"| {bv/max(ov,1e-12):.1f}x |"
+                )
+    return "\n".join(out) + "\n"
+
+
+def consensus_table(multi):
+    out = [
+        "| arch | impl | collective | wire GiB/chip | amortized by T=60 |",
+        "|---|---|---|---|---|",
+    ]
+    for r in multi:
+        c = r.get("consensus")
+        if not c:
+            continue
+        out.append(
+            f"| {c['arch']} | {c['extra'].get('impl','?')} "
+            f"| {fmt_seconds(c['collective_s'])} "
+            f"| {_fmt_gib(c['coll_wire_bytes_per_chip'])} "
+            f"| {fmt_seconds(c['collective_s']/60)}/step |"
+        )
+    return "\n".join(out) + "\n"
+
+
+def summarize(results):
+    ok = [r for r in results if r["ok"]]
+    doms = {}
+    for r in ok:
+        doms[r["report"]["dominant"]] = doms.get(r["report"]["dominant"], 0) + 1
+    return f"{len(ok)}/{len(results)} compiled; dominant terms: {doms}"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--opt", required=True)
+    ap.add_argument("--multi", required=True)
+    ap.add_argument("--out", required=True)
+    args = ap.parse_args(argv)
+
+    baseline, opt, multi = _load(args.baseline), _load(args.opt), _load(args.multi)
+    parts = [
+        "## Dry-run / roofline summaries\n",
+        f"- single-pod baseline: {summarize(baseline)}",
+        f"- single-pod optimized: {summarize(opt)}",
+        f"- multi-pod (2x16x16) optimized: {summarize(multi)}\n",
+        roofline_table(baseline, title="Single-pod 16x16 — paper-faithful baseline (cache_layout=heads)"),
+        roofline_table(opt, title="Single-pod 16x16 — optimized (cache_layout=seq)"),
+        roofline_table(multi, title="Multi-pod 2x16x16 — optimized (P2P peers = pods)"),
+        "### Baseline vs optimized (>=1.25x deltas)\n",
+        comparison_table(baseline, opt),
+        "### Consensus step across the pod axis\n",
+        consensus_table(multi),
+    ]
+    with open(args.out, "w") as f:
+        f.write("\n".join(parts))
+    print("wrote", args.out)
+
+
+if __name__ == "__main__":
+    main()

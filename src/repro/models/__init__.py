@@ -1,0 +1,4 @@
+"""Model zoo: attention/MoE/SSM blocks and family stacks."""
+from repro.models.registry import Model, build_model
+
+__all__ = ["Model", "build_model"]

@@ -1,0 +1,324 @@
+"""Attention: GQA (full / sliding-window) and MLA (DeepSeek-V2), with KV caches.
+
+Cache layout is unified: every cache carries ``pos_ids`` — the absolute
+position stored in each slot (-1 = empty).  Full-causal caches have
+``cache_len = max_seq``; sliding-window caches are ring buffers of
+``cache_len = window`` (write slot = pos % window), which is what makes
+``long_500k`` decode O(window) in memory for attention archs.
+
+MLA caches the *latent* (c_kv, k_rope) — the paper-faithful DeepSeek-V2
+design; ``mla_absorb`` switches decode to the weight-absorbed form that never
+re-expands K/V over the cache length (a §Perf item).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttentionConfig
+from repro.models import common
+from repro.sharding import logical
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init(key: jax.Array, d_model: int, cfg: AttentionConfig, dtype) -> dict:
+    if cfg.kind == "mla":
+        return _mla_init(key, d_model, cfg, dtype)
+    return _gqa_init(key, d_model, cfg, dtype)
+
+
+def _gqa_init(key, d_model, cfg: AttentionConfig, dtype) -> dict:
+    kq, kk, kv, ko, kb = jax.random.split(key, 5)
+    h, kh, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    p = {
+        "w_q": common.dense_init(kq, d_model, (h, dh), dtype),
+        "w_k": common.dense_init(kk, d_model, (kh, dh), dtype),
+        "w_v": common.dense_init(kv, d_model, (kh, dh), dtype),
+        "w_o": common.dense_init(ko, h * dh, d_model, dtype),
+    }
+    if cfg.qkv_bias:
+        del kb
+        p["b_q"] = jnp.zeros((h, dh), dtype)
+        p["b_k"] = jnp.zeros((kh, dh), dtype)
+        p["b_v"] = jnp.zeros((kh, dh), dtype)
+    return p
+
+
+def _mla_init(key, d_model, cfg: AttentionConfig, dtype) -> dict:
+    ks = jax.random.split(key, 8)
+    h = cfg.num_heads
+    nope, rope, vd, lora = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    p = {
+        "w_dkv": common.dense_init(ks[0], d_model, lora + rope, dtype),
+        "kv_norm": common.rmsnorm_init(lora, dtype),
+        "w_uk": common.dense_init(ks[1], lora, (h, nope), dtype),
+        "w_uv": common.dense_init(ks[2], lora, (h, vd), dtype),
+        "w_o": common.dense_init(ks[3], h * vd, d_model, dtype),
+    }
+    if cfg.q_lora_rank:
+        p["w_dq"] = common.dense_init(ks[4], d_model, cfg.q_lora_rank, dtype)
+        p["q_norm"] = common.rmsnorm_init(cfg.q_lora_rank, dtype)
+        p["w_uq"] = common.dense_init(ks[5], cfg.q_lora_rank, (h, nope + rope), dtype)
+    else:
+        p["w_q"] = common.dense_init(ks[5], d_model, (h, nope + rope), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: AttentionConfig, batch: int, max_seq: int, dtype) -> dict:
+    """Decode cache; ring buffer of size window when sliding-window.
+
+    cache_quant="int8" stores K/V as int8 with a per-(slot, head) absmax
+    scale — halves cache bytes (the decode memory-term floor) at <1e-2
+    logit error (tests/test_perf_variants.py)."""
+    cache_len = min(max_seq, cfg.sliding_window) if cfg.sliding_window else max_seq
+    pos_ids = jnp.full((batch, cache_len), -1, jnp.int32)
+    if cfg.kind == "mla":
+        return {
+            "c_kv": jnp.zeros((batch, cache_len, cfg.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, cache_len, cfg.qk_rope_dim), dtype),
+            "pos_ids": pos_ids,
+        }
+    kv_shape = (batch, cache_len, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.cache_quant == "int8":
+        return {
+            "k": jnp.zeros(kv_shape, jnp.int8),
+            "v": jnp.zeros(kv_shape, jnp.int8),
+            "k_scale": jnp.zeros(kv_shape[:3], jnp.float16),
+            "v_scale": jnp.zeros(kv_shape[:3], jnp.float16),
+            "pos_ids": pos_ids,
+        }
+    return {
+        "k": jnp.zeros(kv_shape, dtype),
+        "v": jnp.zeros(kv_shape, dtype),
+        "pos_ids": pos_ids,
+    }
+
+
+def _quantize_kv(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x: (B, T, Kh, D) -> (int8 values, f16 per-(token, head) scales)."""
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(absmax / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.float16)
+
+
+def _dequantize_kv(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale.astype(jnp.float32)[..., None]
+
+
+def cache_bytes(cfg: AttentionConfig, batch: int, max_seq: int, bytes_per_el: int = 2) -> int:
+    cache_len = min(max_seq, cfg.sliding_window) if cfg.sliding_window else max_seq
+    if cfg.kind == "mla":
+        return batch * cache_len * (cfg.kv_lora_rank + cfg.qk_rope_dim) * bytes_per_el
+    return batch * cache_len * 2 * cfg.num_kv_heads * cfg.head_dim * bytes_per_el
+
+
+def _write_slots(cache_len: int, positions: jax.Array) -> jax.Array:
+    """Ring-buffer slot for each absolute position (identity if cache covers seq)."""
+    return positions % cache_len
+
+
+def _scatter_cache(buf: jax.Array, slots: jax.Array, values: jax.Array) -> jax.Array:
+    """buf: (B, C, ...); slots: (B, T); values: (B, T, ...)."""
+    bidx = jnp.arange(buf.shape[0])[:, None]
+    return buf.at[bidx, slots].set(values.astype(buf.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Core attend
+# ---------------------------------------------------------------------------
+
+
+def _attend(q, k, v, mask, scale):
+    """q: (B,T,Kh,G,dh) grouped query; k/v: (B,C,Kh,dh); mask: (B,1,1,T,C)."""
+    scores = jnp.einsum("btkgd,bckd->bkgtc", q.astype(jnp.float32), k.astype(jnp.float32))
+    scores = scores * scale + jnp.where(mask, 0.0, NEG_INF)  # mask: (B,1,1,T,C)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bkgtc,bckd->btkgd", probs, v.astype(jnp.float32))
+    return ctx
+
+
+def _make_mask(q_pos: jax.Array, kv_pos: jax.Array, window: Optional[int]) -> jax.Array:
+    """(B, T, C) bool: causal, slot-valid, and optionally windowed."""
+    m = (kv_pos[:, None, :] >= 0) & (kv_pos[:, None, :] <= q_pos[:, :, None])
+    if window:
+        m &= (q_pos[:, :, None] - kv_pos[:, None, :]) < window
+    return m
+
+
+def gqa_apply(
+    params: dict,
+    cfg: AttentionConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    cache: Optional[dict] = None,
+    causal: bool = True,
+) -> tuple[jax.Array, Optional[dict]]:
+    """x: (B, T, D); positions: (B, T) absolute. Returns (out, new_cache)."""
+    b, t, _ = x.shape
+    h, kh, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    g = h // kh
+
+    q = jnp.einsum("btd,dhx->bthx", x, params["w_q"])
+    k = jnp.einsum("btd,dkx->btkx", x, params["w_k"])
+    v = jnp.einsum("btd,dkx->btkx", x, params["w_v"])
+    if "b_q" in params:
+        q, k, v = q + params["b_q"], k + params["b_k"], v + params["b_v"]
+    q = logical.shard(q, "batch", "seq", "heads", "head_dim")
+    k = logical.shard(k, "batch", "seq", "kv_heads", "head_dim")
+    v = logical.shard(v, "batch", "seq", "kv_heads", "head_dim")
+    q = common.apply_rope(q, positions, cfg.rope_theta)
+    k = common.apply_rope(k, positions, cfg.rope_theta)
+
+    if cache is not None:
+        cache_len = cache["k"].shape[1]
+        slots = _write_slots(cache_len, positions)
+        if "k_scale" in cache:  # int8-quantized cache
+            kq, ks = _quantize_kv(k)
+            vq, vs = _quantize_kv(v)
+            cache = {
+                "k": _scatter_cache(cache["k"], slots, kq),
+                "v": _scatter_cache(cache["v"], slots, vq),
+                "k_scale": _scatter_cache(cache["k_scale"], slots, ks),
+                "v_scale": _scatter_cache(cache["v_scale"], slots, vs),
+                "pos_ids": _scatter_cache(cache["pos_ids"], slots, positions),
+            }
+            kk = _dequantize_kv(cache["k"], cache["k_scale"])
+            vv = _dequantize_kv(cache["v"], cache["v_scale"])
+            kv_pos = cache["pos_ids"]
+        else:
+            cache = {
+                "k": _scatter_cache(cache["k"], slots, k),
+                "v": _scatter_cache(cache["v"], slots, v),
+                "pos_ids": _scatter_cache(cache["pos_ids"], slots, positions),
+            }
+            kk, vv, kv_pos = cache["k"], cache["v"], cache["pos_ids"]
+    else:
+        kk, vv, kv_pos = k, v, positions
+
+    if causal:
+        mask = _make_mask(positions, kv_pos, cfg.sliding_window)
+    else:
+        mask = (kv_pos[:, None, :] >= 0) & jnp.ones((b, t, 1), bool)
+    qg = q.reshape(b, t, kh, g, dh)
+    ctx = _attend(qg, kk, vv, mask[:, None, None], dh**-0.5)
+    ctx = ctx.reshape(b, t, h * dh).astype(x.dtype)
+    out = jnp.einsum("bte,ed->btd", ctx, params["w_o"])
+    return logical.shard(out, "batch", "residual_seq", "embed"), cache
+
+
+def cross_attention_apply(
+    params: dict,
+    cfg: AttentionConfig,
+    x: jax.Array,
+    enc_kv: tuple[jax.Array, jax.Array],
+) -> jax.Array:
+    """Decoder cross-attention against precomputed encoder K/V (no RoPE)."""
+    b, t, _ = x.shape
+    h, kh, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("btd,dhx->bthx", x, params["w_q"])
+    k, v = enc_kv
+    qg = q.reshape(b, t, kh, h // kh, dh)
+    mask = jnp.ones((b, 1, 1, t, k.shape[1]), bool)
+    ctx = _attend(qg, k, v, mask, dh**-0.5).reshape(b, t, h * dh).astype(x.dtype)
+    return jnp.einsum("bte,ed->btd", ctx, params["w_o"])
+
+
+def encoder_kv(params: dict, cfg: AttentionConfig, enc_out: jax.Array) -> tuple[jax.Array, jax.Array]:
+    k = jnp.einsum("btd,dkx->btkx", enc_out, params["w_k"])
+    v = jnp.einsum("btd,dkx->btkx", enc_out, params["w_v"])
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+
+def _mla_q(params, cfg: AttentionConfig, x, positions):
+    if cfg.q_lora_rank:
+        cq = jnp.einsum("btd,dr->btr", x, params["w_dq"])
+        cq = common.rmsnorm(params["q_norm"], cq)
+        q = jnp.einsum("btr,rhx->bthx", cq, params["w_uq"])
+    else:
+        q = jnp.einsum("btd,dhx->bthx", x, params["w_q"])
+    q_nope = q[..., : cfg.qk_nope_dim]
+    q_rope = common.apply_rope(q[..., cfg.qk_nope_dim :], positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_apply(
+    params: dict,
+    cfg: AttentionConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    cache: Optional[dict] = None,
+) -> tuple[jax.Array, Optional[dict]]:
+    b, t, _ = x.shape
+    h = cfg.num_heads
+    scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+
+    q_nope, q_rope = _mla_q(params, cfg, x, positions)
+
+    dkv = jnp.einsum("btd,dr->btr", x, params["w_dkv"])
+    c_kv = common.rmsnorm(params["kv_norm"], dkv[..., : cfg.kv_lora_rank])
+    k_rope = common.apply_rope(dkv[..., cfg.kv_lora_rank :], positions, cfg.rope_theta)
+    c_kv = logical.shard(c_kv, "batch", "seq", "kv_lora")
+
+    if cache is not None:
+        cache_len = cache["c_kv"].shape[1]
+        slots = _write_slots(cache_len, positions)
+        cache = {
+            "c_kv": _scatter_cache(cache["c_kv"], slots, c_kv),
+            "k_rope": _scatter_cache(cache["k_rope"], slots, k_rope),
+            "pos_ids": _scatter_cache(cache["pos_ids"], slots, positions),
+        }
+        c_all, krope_all, kv_pos = cache["c_kv"], cache["k_rope"], cache["pos_ids"]
+    else:
+        c_all, krope_all, kv_pos = c_kv, k_rope, positions
+
+    mask = _make_mask(positions, kv_pos, cfg.sliding_window)[:, None]  # (B,1,T,C)
+
+    if cfg.mla_absorb and cache is not None:
+        # Absorbed decode: score/context directly in the latent space.
+        q_lat = jnp.einsum("bthn,rhn->bthr", q_nope.astype(jnp.float32), params["w_uk"].astype(jnp.float32))
+        scores = jnp.einsum("bthr,bcr->bhtc", q_lat, c_all.astype(jnp.float32))
+        scores += jnp.einsum("bthp,bcp->bhtc", q_rope.astype(jnp.float32), krope_all.astype(jnp.float32))
+        scores = scores * scale + jnp.where(mask, 0.0, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        ctx_lat = jnp.einsum("bhtc,bcr->bthr", probs, c_all.astype(jnp.float32))
+        ctx = jnp.einsum("bthr,rhv->bthv", ctx_lat, params["w_uv"].astype(jnp.float32))
+    else:
+        # Expanded path (training / prefill / naive decode baseline).
+        k_nope = jnp.einsum("bcr,rhn->bchn", c_all, params["w_uk"])
+        vv = jnp.einsum("bcr,rhv->bchv", c_all, params["w_uv"])
+        scores = jnp.einsum("bthn,bchn->bhtc", q_nope.astype(jnp.float32), k_nope.astype(jnp.float32))
+        scores += jnp.einsum("bthp,bcp->bhtc", q_rope.astype(jnp.float32), krope_all.astype(jnp.float32))
+        scores = scores * scale + jnp.where(mask, 0.0, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhtc,bchv->bthv", probs, vv.astype(jnp.float32))
+
+    ctx = ctx.reshape(b, t, h * cfg.v_head_dim).astype(x.dtype)
+    out = jnp.einsum("bte,ed->btd", ctx, params["w_o"])
+    return logical.shard(out, "batch", "residual_seq", "embed"), cache
+
+
+def apply(params, cfg: AttentionConfig, x, positions, *, cache=None, causal=True):
+    if cfg.kind == "mla":
+        return mla_apply(params, cfg, x, positions, cache=cache)
+    return gqa_apply(params, cfg, x, positions, cache=cache, causal=causal)

@@ -1,0 +1,47 @@
+"""The paper's model: the 2NN MLP from McMahan et al. [9], Sec. V.
+
+"multilayer perceptrons (2NN) to classify MNIST images": 784 -> 200 -> 200
+-> 10 with ReLU.  PyTorch-default init (uniform +- 1/sqrt(fan_in)) is
+replicated so max-norm synchronization behaves as in P2PL [6].
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_2nn(key: jax.Array, *, in_dim: int = 784, hidden: int = 200, num_classes: int = 10) -> dict:
+    def torch_linear(k, fan_in, fan_out):
+        kw, kb = jax.random.split(k)
+        bound = fan_in**-0.5
+        return {
+            "w": jax.random.uniform(kw, (fan_in, fan_out), jnp.float32, -bound, bound),
+            "b": jax.random.uniform(kb, (fan_out,), jnp.float32, -bound, bound),
+        }
+
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "fc1": torch_linear(k1, in_dim, hidden),
+        "fc2": torch_linear(k2, hidden, hidden),
+        "out": torch_linear(k3, hidden, num_classes),
+    }
+
+
+def apply_2nn(params: dict, x: jax.Array) -> jax.Array:
+    """x: (N, 784) or (N, 28, 28) -> logits (N, 10)."""
+    x = x.reshape(x.shape[0], -1)
+    h = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    h = jax.nn.relu(h @ params["fc2"]["w"] + params["fc2"]["b"])
+    return h @ params["out"]["w"] + params["out"]["b"]
+
+
+def loss_2nn(params: dict, batch) -> jax.Array:
+    """Mean cross-entropy. batch = (images, int labels)."""
+    x, y = batch
+    logits = apply_2nn(params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1))
+
+
+def accuracy_2nn(params: dict, x: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.mean((jnp.argmax(apply_2nn(params, x), -1) == y).astype(jnp.float32))

@@ -1,0 +1,161 @@
+"""Mixture-of-Experts with grouped-capacity dispatch (expert parallel).
+
+Dispatch strategy (pjit-friendly, no shard_map):
+- tokens are split into G routing groups; at scale G = the mesh `data` axis
+  size, so routing/gather/scatter never cross data shards (local routing with
+  local capacity, as in GShard/Switch).
+- within a group, top-k assignments receive a slot ``(expert, position)``
+  where position = running count of that expert's tokens (capacity C;
+  overflow tokens are dropped — standard capacity-factor semantics).
+- expert compute is three grouped einsums over (G, E, C, D) with the expert
+  axis E sharded over the mesh `model` axis (expert parallelism); the combine
+  scatter-add produces a partial sum per model shard that XLA resolves with an
+  all-reduce — the honest EP+TP collective cost (an all-to-all dispatch
+  variant is a §Perf optimization, see EXPERIMENTS.md).
+
+FLOPs are O(N * top_k * capacity_factor * D * F) — matching the paper-family
+"activated parameters" accounting (no dense all-expert compute).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models import common
+from repro.sharding import logical
+
+
+def init(key: jax.Array, d_model: int, cfg: MoEConfig, dtype) -> dict:
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+    e, f = cfg.num_experts, cfg.expert_ff
+    p = {
+        "router": common.dense_init(kr, d_model, e, jnp.float32),
+        "w_gate": common.truncated_normal_init(kg, (e, d_model, f), d_model**-0.5, dtype),
+        "w_up": common.truncated_normal_init(ku, (e, d_model, f), d_model**-0.5, dtype),
+        "w_down": common.truncated_normal_init(kd, (e, f, d_model), f**-0.5, dtype),
+    }
+    if cfg.num_shared:
+        p["shared"] = common.mlp_init(ks, d_model, cfg.num_shared * f, dtype, gated=True)
+    return p
+
+
+def _num_groups(cfg: MoEConfig, n_tokens: int) -> int:
+    g = max(1, cfg.router_groups)
+    return math.gcd(g, n_tokens)
+
+
+def capacity(cfg: MoEConfig, tokens_per_group: int) -> int:
+    c = math.ceil(tokens_per_group * cfg.top_k * cfg.capacity_factor / cfg.num_experts)
+    return max(8, -(-c // 8) * 8)  # round up to a multiple of 8
+
+
+def apply(params: dict, cfg: MoEConfig, x: jax.Array, *, act: str = "silu") -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, D). Returns (out (B,S,D), load-balance aux loss scalar f32)."""
+    b, s, d = x.shape
+    n = b * s
+    g = _num_groups(cfg, n)
+    ng = n // g
+    e, k = cfg.num_experts, cfg.top_k
+    c = capacity(cfg, ng)
+
+    xg = x.reshape(g, ng, d)
+    xg = logical.shard(xg, "expert_group", None, "embed")
+
+    # --- routing (f32) ------------------------------------------------------
+    logits = jnp.einsum("gnd,de->gne", xg.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)  # (G, Ng, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (G, Ng, K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance loss: E * sum_e f_e * P_e  (Switch Transformer form)
+    onehot = jax.nn.one_hot(expert_idx, e, dtype=jnp.float32)  # (G, Ng, K, E)
+    f_e = onehot.sum(axis=(1, 2)) / ng  # (G, E) fraction routed (pre-capacity)
+    p_e = probs.mean(axis=1)  # (G, E)
+    aux = e * jnp.mean(jnp.sum(f_e / k * p_e, axis=-1))
+
+    # --- slot assignment ----------------------------------------------------
+    # Flatten (token, k-choice) assignments in token order; position within
+    # each expert = exclusive running count; position >= C drops the token.
+    flat_e = expert_idx.reshape(g, ng * k)  # (G, A) expert id per assignment
+    flat_gate = gate_vals.reshape(g, ng * k)
+    flat_tok = jnp.broadcast_to(jnp.arange(ng)[:, None], (ng, k)).reshape(ng * k)
+    flat_tok = jnp.broadcast_to(flat_tok, (g, ng * k))
+
+    assign_oh = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)  # (G, A, E)
+    pos_in_e = jnp.cumsum(assign_oh, axis=1) - assign_oh  # exclusive cumsum
+    pos = jnp.take_along_axis(pos_in_e, flat_e[..., None], axis=-1)[..., 0]  # (G, A)
+    keep = pos < c
+    dest = jnp.where(keep, flat_e * c + pos, e * c)  # overflow slot = e*c
+
+    # All slot bookkeeping is vmapped over G so the group axis stays a true
+    # scatter/gather *batch* dim — GSPMD partitions batch dims over `data`;
+    # an explicit 2-D index formulation defeats that and replicates every
+    # group on every chip (measured: 16x combine payload for deepseek-v2).
+    def build_slots(dest_g, tok_g, gate_g):
+        st = jnp.full((e * c + 1,), ng, jnp.int32).at[dest_g].set(tok_g)
+        sg = jnp.zeros((e * c + 1,), jnp.float32).at[dest_g].set(gate_g)
+        return st[:-1], sg[:-1]  # drop the overflow slot
+
+    slot_tok, slot_gate = jax.vmap(build_slots)(dest, flat_tok, flat_gate)
+
+    # --- gather -> expert compute -> combine --------------------------------
+    x_pad = jnp.concatenate([xg, jnp.zeros((g, 1, d), xg.dtype)], axis=1)
+    xe = jax.vmap(lambda xp, st: xp[st])(x_pad, slot_tok)  # (G, E*C, D)
+    xe = xe.reshape(g, e, c, d)
+    xe = logical.shard(xe, "expert_group", "experts", None, None)
+
+    h_gate = jnp.einsum("gecd,edf->gecf", xe, params["w_gate"])
+    h_up = jnp.einsum("gecd,edf->gecf", xe, params["w_up"])
+    h = common.act_fn(act)(h_gate.astype(jnp.float32)).astype(x.dtype) * h_up
+    ye = jnp.einsum("gecf,efd->gecd", h, params["w_down"])
+    ye = logical.shard(ye, "expert_group", "experts", None, None)
+
+    y_flat = ye.reshape(g, e * c, d) * slot_gate[..., None].astype(ye.dtype)
+
+    # combine in the model dtype: each token receives at most top_k + shared
+    # partial outputs, so bf16 accumulation is safe — and it halves the
+    # expert-parallel psum payload (a measured 2x on the collective term).
+    def combine(yt, st):
+        return jnp.zeros((ng + 1, d), x.dtype).at[st].add(yt)
+
+    out = jax.vmap(combine)(y_flat.astype(x.dtype), slot_tok)
+    out = out[:, :ng]
+    out = logical.shard(out, "expert_group", None, "embed")
+
+    if "shared" in params:
+        out = out + common.mlp_apply(params["shared"], xg, act=act).reshape(g, ng, d)
+
+    return out.reshape(b, s, d), aux
+
+
+def apply_dense_reference(params: dict, cfg: MoEConfig, x: jax.Array, *, act: str = "silu") -> tuple[jax.Array, jax.Array]:
+    """O(N·E) oracle: every expert computed on every token, masked by top-k
+    gates, no capacity dropping.  Used only in tests to validate `apply`."""
+    b, s, d = x.shape
+    xf = x.reshape(-1, d)
+    logits = xf.astype(jnp.float32) @ params["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, cfg.top_k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+    dense_gates = jnp.zeros_like(probs)
+    nidx = jnp.arange(xf.shape[0])[:, None]
+    dense_gates = dense_gates.at[nidx, expert_idx].set(gate_vals)  # (N, E)
+
+    h_gate = jnp.einsum("nd,edf->enf", xf, params["w_gate"])
+    h_up = jnp.einsum("nd,edf->enf", xf, params["w_up"])
+    h = common.act_fn(act)(h_gate.astype(jnp.float32)).astype(x.dtype) * h_up
+    ye = jnp.einsum("enf,efd->end", h, params["w_down"])  # (E, N, D)
+    out = jnp.einsum("end,ne->nd", ye.astype(jnp.float32), dense_gates)
+
+    onehot = jax.nn.one_hot(expert_idx, cfg.num_experts, dtype=jnp.float32)
+    f_e = onehot.sum(axis=(0, 1)) / xf.shape[0]
+    p_e = probs.mean(axis=0)
+    aux = cfg.num_experts * jnp.sum(f_e / cfg.top_k * p_e)
+
+    out = out.astype(x.dtype)
+    if "shared" in params:
+        out = out + common.mlp_apply(params["shared"], x, act=act).reshape(-1, d)
+    return out.reshape(b, s, d), aux

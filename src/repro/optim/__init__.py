@@ -1,0 +1,113 @@
+"""Pure-JAX pytree optimizers (no optax in this container).
+
+``sgd`` implements the paper's PyTorch-default Polyak momentum:
+    buf <- mu * buf + g;  w <- w - lr * buf
+``adamw`` for the LLM substrate.  All optimizers are (init, update) pairs over
+arbitrary pytrees, f32 state regardless of param dtype.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree, jax.Array], tuple[PyTree, PyTree]]
+    # update(grads, state, params, step) -> (new_params, new_state)
+
+
+def sgd(lr: float | Callable[[jax.Array], jax.Array], momentum: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _s: lr)
+
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def update(grads, state, params, step):
+        eta = lr_fn(step)
+        if momentum == 0.0:
+            new = jax.tree.map(
+                lambda p, g: (p.astype(jnp.float32) - eta * g.astype(jnp.float32)).astype(p.dtype),
+                params,
+                grads,
+            )
+            return new, state
+        buf = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32), state, grads)
+        new = jax.tree.map(
+            lambda p, m: (p.astype(jnp.float32) - eta * m).astype(p.dtype), params, buf
+        )
+        return new, buf
+
+    return Optimizer(init, update)
+
+
+def adamw(
+    lr: float | Callable[[jax.Array], jax.Array],
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _s: lr)
+
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32), state["m"], grads)
+        v = jax.tree.map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)), state["v"], grads
+        )
+        mh = jax.tree.map(lambda m_: m_ / (1 - b1**t), m)
+        vh = jax.tree.map(lambda v_: v_ / (1 - b2**t), v)
+        eta = lr_fn(step)
+
+        def upd(p, mh_, vh_):
+            pf = p.astype(jnp.float32)
+            step_ = mh_ / (jnp.sqrt(vh_) + eps) + weight_decay * pf
+            return (pf - eta * step_).astype(p.dtype)
+
+        return jax.tree.map(upd, params, mh, vh), {"m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# LR schedules
+# ---------------------------------------------------------------------------
+
+
+def constant_schedule(lr: float):
+    return lambda _step: lr
+
+
+def cosine_schedule(peak: float, warmup: int, total: int, floor: float = 0.0):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = peak * s / jnp.maximum(warmup, 1)
+        prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup, warm, cos)
+
+    return fn
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
+    n = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads)

@@ -1,0 +1,4 @@
+"""Sharding: logical-axis rules and per-family partition specs."""
+from repro.sharding import logical
+
+__all__ = ["logical"]

@@ -1,0 +1,112 @@
+"""Logical-axis sharding annotations (MaxText-style, minimal).
+
+Model code annotates tensors with *logical* axis names; a rules table maps
+logical names to mesh axes (or None = replicated).  Outside a mesh context the
+annotations are no-ops, so the same model code runs on a laptop CPU and on a
+512-chip multi-pod mesh.
+
+Usage:
+    with logical.rules(RULES_TP), jax.sharding.use_mesh(mesh):
+        lowered = jax.jit(step).lower(...)
+Inside model code:
+    x = logical.shard(x, "batch", "seq", "embed")
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Mapping, Sequence
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+
+def current_rules() -> Mapping[str, str | Sequence[str] | None] | None:
+    return getattr(_state, "rules", None)
+
+
+def current_mesh():
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def rules(table: Mapping[str, str | Sequence[str] | None] | None, mesh=None):
+    prev, prev_mesh = current_rules(), current_mesh()
+    _state.rules, _state.mesh = table, mesh
+    try:
+        yield
+    finally:
+        _state.rules, _state.mesh = prev, prev_mesh
+
+
+def spec(*logical_axes: str | None) -> P:
+    """Resolve logical axis names to a PartitionSpec under the current rules."""
+    table = current_rules()
+    if table is None:
+        return P()
+    resolved = []
+    for ax in logical_axes:
+        if ax is None:
+            resolved.append(None)
+        else:
+            resolved.append(table.get(ax))
+    return P(*resolved)
+
+
+def shard(x: jax.Array, *logical_axes: str | None) -> jax.Array:
+    """Apply a with_sharding_constraint if rules are active; else identity."""
+    table = current_rules()
+    if table is None:
+        return x
+    if x.ndim != len(logical_axes):
+        raise ValueError(
+            f"rank mismatch: array rank {x.ndim} vs {len(logical_axes)} logical axes"
+        )
+    s = spec(*logical_axes)
+    mesh = current_mesh()
+    if mesh is not None:
+        from jax.sharding import NamedSharding
+
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, s))
+    return jax.lax.with_sharding_constraint(x, s)
+
+
+# ---------------------------------------------------------------------------
+# Standard rule tables
+# ---------------------------------------------------------------------------
+
+# Tensor-parallel only: weights sharded over `model` along head/ff/vocab dims,
+# activations sharded over `data` along batch.
+RULES_TP = {
+    "batch": "data",
+    "seq": None,
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",
+    "expert_cap": None,
+    "expert_group": "data",
+    "layers": None,
+    "kv_lora": None,
+    "conv": None,
+    "state": None,
+    "peer": "pod",
+}
+
+# FSDP + TP: additionally shard the embed dim of weights over `data`.
+RULES_FSDP_TP = dict(RULES_TP, embed_weight="data")
+RULES_TP = dict(RULES_TP, embed_weight=None)
+
+# Peer-stacked small-model mode: the leading peer axis of stacked parameters
+# shards over `data`; model internals replicated or TP over `model`.
+RULES_PEER_STACKED = dict(RULES_TP, peer="data", batch=None)
+
+
+def weight_spec(*logical_axes: str | None) -> P:
+    """Spec for parameters (distinguishes `embed_weight` FSDP axis)."""
+    return spec(*logical_axes)

@@ -1,0 +1,22 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests see the 1 real CPU device
+(the 512-device override belongs ONLY to repro.launch.dryrun)."""
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def mnist_small():
+    from repro.data import synthetic
+
+    return synthetic.mnist_like(4000, 1000)

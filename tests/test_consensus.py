@@ -1,0 +1,112 @@
+"""Consensus operators: stacked einsum vs sparse gather vs mesh collectives."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import consensus as cl
+from repro.core import graph as gl
+
+
+def _tree(rng, k):
+    return {
+        "w": jnp.asarray(rng.normal(size=(k, 5, 3)), jnp.float32),
+        "b": jnp.asarray(rng.normal(size=(k, 7)), jnp.float32),
+    }
+
+
+def test_mix_stacked_matches_numpy(rng):
+    k = 6
+    g = gl.build_graph("ring", k)
+    w = gl.mixing_matrix(g, "metropolis")
+    tree = _tree(rng, k)
+    out = cl.mix_stacked(jnp.asarray(w, jnp.float32), tree)
+    for key in tree:
+        want = np.einsum("kj,j...->k...", w, np.asarray(tree[key]))
+        np.testing.assert_allclose(out[key], want, atol=1e-5)
+
+
+@pytest.mark.parametrize("topo", ["ring", "star", "complete", "erdos_renyi"])
+def test_mix_sparse_equals_dense(rng, topo):
+    k = 8
+    g = gl.build_graph(topo, k)
+    w = gl.mixing_matrix(g, "data_weighted", data_sizes=rng.integers(1, 50, k))
+    tree = _tree(rng, k)
+    self_w, idx, nbr_w = cl.sparse_mixing(w)
+    dense = cl.mix_stacked(jnp.asarray(w, jnp.float32), tree)
+    sparse = cl.mix_sparse(jnp.asarray(self_w), jnp.asarray(idx), jnp.asarray(nbr_w), tree)
+    for key in tree:
+        np.testing.assert_allclose(sparse[key], dense[key], atol=1e-5)
+
+
+def test_mix_psum_under_vmap_axis(rng):
+    """Complete-graph psum form == dense mixing (peer axis via vmap axis_name)."""
+    k = 4
+    g = gl.build_graph("complete", k)
+    w = gl.mixing_matrix(g, "uniform_neighbor")
+    self_w, peer_w = w[0, 0], w[0, 1]
+    tree = _tree(rng, k)
+
+    def per_peer(x):
+        return cl.mix_psum(x, "peer", self_weight=self_w, peer_weight=peer_w)
+
+    out = jax.vmap(per_peer, axis_name="peer")(tree)
+    want = cl.mix_stacked(jnp.asarray(w, jnp.float32), tree)
+    for key in tree:
+        np.testing.assert_allclose(out[key], want[key], atol=1e-5)
+
+
+def test_mix_ring_under_vmap_axis(rng):
+    k = 5
+    g = gl.build_graph("ring", k)
+    w = gl.mixing_matrix(g, "uniform_neighbor")
+    tree = _tree(rng, k)
+
+    def per_peer(x):
+        return cl.mix_ring(
+            x, "peer",
+            self_weight=w[0, 0], left_weight=w[0, k - 1], right_weight=w[0, 1],
+        )
+
+    out = jax.vmap(per_peer, axis_name="peer")(tree)
+    want = cl.mix_stacked(jnp.asarray(w, jnp.float32), tree)
+    for key in tree:
+        np.testing.assert_allclose(out[key], want[key], atol=1e-5)
+
+
+def test_max_norm_sync_picks_largest(rng):
+    k = 4
+    tree = {"w": jnp.asarray(rng.normal(size=(k, 6)), jnp.float32)}
+    tree["w"] = tree["w"].at[2].mul(10.0)  # peer 2 has the largest norm
+    out = cl.max_norm_sync(tree)
+    for i in range(k):
+        np.testing.assert_allclose(out["w"][i], tree["w"][2])
+
+
+def test_consensus_error_and_drift(rng):
+    k = 3
+    same = {"w": jnp.ones((k, 4), jnp.float32)}
+    assert float(cl.consensus_error(same)) < 1e-6
+    assert float(cl.pairwise_drift(same)) < 1e-3
+    tree = _tree(rng, k)
+    assert float(cl.consensus_error(tree)) > 0.1
+    # mixing with a complete graph reduces drift
+    g = gl.build_graph("complete", k)
+    w = jnp.asarray(gl.mixing_matrix(g, "uniform_neighbor"), jnp.float32)
+    mixed = cl.mix_stacked(w, tree)
+    assert float(cl.pairwise_drift(mixed)) < float(cl.pairwise_drift(tree))
+
+
+def test_repeated_mixing_converges_to_average(rng):
+    k = 8
+    g = gl.build_graph("ring", k)
+    w = jnp.asarray(gl.mixing_matrix(g, "metropolis"), jnp.float32)
+    tree = _tree(rng, k)
+    avg = {key: np.asarray(tree[key]).mean(0) for key in tree}
+    x = tree
+    for _ in range(500):
+        x = cl.mix_stacked(w, x)
+    for key in tree:
+        np.testing.assert_allclose(
+            np.asarray(x[key]), np.broadcast_to(avg[key], x[key].shape), atol=1e-3
+        )

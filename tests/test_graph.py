@@ -1,0 +1,107 @@
+"""Communication graphs and mixing matrices (incl. hypothesis properties)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import graph as gl
+
+
+@pytest.mark.parametrize("topo,k", [
+    ("complete", 5), ("ring", 6), ("chain", 4), ("star", 7),
+    ("torus2d", 9), ("hypercube", 8), ("erdos_renyi", 10),
+])
+def test_topologies_connected(topo, k):
+    g = gl.build_graph(topo, k)
+    assert g.num_peers == k
+    assert g.is_connected()
+    assert not g.adjacency.diagonal().any()
+
+
+def test_disconnected_graph():
+    g = gl.build_graph("disconnected", 4)
+    assert not g.is_connected()
+    assert g.degree().sum() == 0
+
+
+def test_torus_requires_square():
+    with pytest.raises(ValueError):
+        gl.build_graph("torus2d", 8)
+
+
+@pytest.mark.parametrize("mixing", ["data_weighted", "metropolis", "uniform_neighbor"])
+@pytest.mark.parametrize("topo", ["complete", "ring", "star"])
+def test_mixing_row_stochastic(mixing, topo):
+    g = gl.build_graph(topo, 6)
+    n = np.array([10, 20, 30, 40, 50, 60])
+    w = gl.mixing_matrix(g, mixing, data_sizes=n)
+    assert np.allclose(w.sum(1), 1.0)
+    assert (w >= -1e-12).all()
+    # zeros outside the graph edges (+diagonal)
+    mask = g.adjacency | np.eye(6, dtype=bool)
+    assert np.allclose(w[~mask], 0.0)
+
+
+def test_paper_data_weighted_formula():
+    """alpha_kj = n_j / (n_k + sum_{i in N(k)} n_i) — Sec. V-A."""
+    g = gl.build_graph("complete", 3)
+    n = np.array([100.0, 200.0, 300.0])
+    w = gl.mixing_matrix(g, "data_weighted", data_sizes=n)
+    assert np.isclose(w[0, 1], 200 / 600)
+    assert np.isclose(w[0, 2], 300 / 600)
+    assert np.isclose(w[0, 0], 100 / 600)
+
+
+def test_metropolis_doubly_stochastic():
+    g = gl.build_graph("erdos_renyi", 8, seed=3)
+    w = gl.mixing_matrix(g, "metropolis")
+    assert np.allclose(w.sum(0), 1.0)
+    assert np.allclose(w.sum(1), 1.0)
+
+
+def test_consensus_step_size():
+    g = gl.build_graph("ring", 4)
+    w1 = gl.mixing_matrix(g, "metropolis", consensus_step_size=1.0)
+    w0 = gl.mixing_matrix(g, "metropolis", consensus_step_size=0.0)
+    wh = gl.mixing_matrix(g, "metropolis", consensus_step_size=0.5)
+    assert np.allclose(w0, np.eye(4))
+    assert np.allclose(wh, 0.5 * np.eye(4) + 0.5 * w1)
+
+
+def test_affinity_matrix_rows():
+    g = gl.build_graph("star", 5)
+    b = gl.affinity_matrix(g, data_sizes=[1, 2, 3, 4, 5])
+    assert np.allclose(b.sum(1), 1.0)  # rows sum to 1 over neighbors
+    assert np.allclose(np.diag(b), 0.0)  # no self weight in beta
+
+
+def test_spectral_gap_ordering():
+    """Better-connected graphs have larger spectral gaps (faster consensus)."""
+    gaps = {}
+    for topo in ("complete", "torus2d", "ring", "chain"):
+        g = gl.build_graph(topo, 16)
+        gaps[topo] = gl.spectral_gap(gl.mixing_matrix(g, "metropolis"))
+    assert gaps["complete"] > gaps["torus2d"] > gaps["ring"] > gaps["chain"] > 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    k=st.integers(3, 12),
+    seed=st.integers(0, 1000),
+    p=st.floats(0.2, 0.9),
+)
+def test_property_random_graph_mixing(k, seed, p):
+    g = gl.build_graph("erdos_renyi", k, p=p, seed=seed)
+    n = np.random.default_rng(seed).integers(1, 100, size=k)
+    w = gl.mixing_matrix(g, "data_weighted", data_sizes=n)
+    assert np.allclose(w.sum(1), 1.0)
+    assert (w >= -1e-12).all()
+    # consensus contraction: applying W repeatedly converges to rank-1;
+    # iteration budget scales with the spectral gap (hypothesis finds
+    # near-bipartite graphs whose |lambda_2| is close to 1)
+    gap = gl.spectral_gap(w)
+    iters = min(20000, int(30 / max(gap, 1e-3)))
+    x = np.random.default_rng(seed + 1).normal(size=(k, 3))
+    for _ in range(iters):
+        x = w @ x
+    assert np.allclose(x, x[0], atol=1e-3)

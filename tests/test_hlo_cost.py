@@ -1,0 +1,89 @@
+"""HLO cost model: closed-form validation (the roofline's data source)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch import hlo_cost
+
+
+def _compile(f, *shapes):
+    return jax.jit(f).lower(*shapes).compile()
+
+
+def test_single_matmul_flops():
+    c = _compile(
+        lambda x, w: x @ w,
+        jax.ShapeDtypeStruct((128, 256), jnp.float32),
+        jax.ShapeDtypeStruct((256, 64), jnp.float32),
+    )
+    hc = hlo_cost.analyze(c.as_text())
+    assert hc.flops == 2 * 128 * 256 * 64
+
+
+def test_scan_multiplies_by_trip_count():
+    def f(x, w):
+        def body(carry, _):
+            return carry @ w, None
+        out, _ = jax.lax.scan(body, x, None, length=10)
+        return out
+
+    c = _compile(f, jax.ShapeDtypeStruct((128, 128), jnp.float32),
+                 jax.ShapeDtypeStruct((128, 128), jnp.float32))
+    hc = hlo_cost.analyze(c.as_text())
+    assert hc.flops == 10 * 2 * 128**3
+    assert any(v == 10.0 for v in hc.loop_info.values())
+
+
+def test_nested_scan_multipliers_compose():
+    def f(x, w):
+        def inner(c, _):
+            return c @ w, None
+
+        def outer(c, _):
+            c, _ = jax.lax.scan(inner, c, None, length=5)
+            return c, None
+
+        out, _ = jax.lax.scan(outer, x, None, length=3)
+        return out
+
+    c = _compile(f, jax.ShapeDtypeStruct((64, 64), jnp.float32),
+                 jax.ShapeDtypeStruct((64, 64), jnp.float32))
+    hc = hlo_cost.analyze(c.as_text())
+    assert hc.flops == 15 * 2 * 64**3
+
+
+def test_grad_of_scan_counts_fwd_and_bwd():
+    def loss(w, x):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        out, _ = jax.lax.scan(body, x, None, length=10)
+        return out.sum()
+
+    c = _compile(jax.grad(loss), jax.ShapeDtypeStruct((64, 64), jnp.float32),
+                 jax.ShapeDtypeStruct((8, 64), jnp.float32))
+    hc = hlo_cost.analyze(c.as_text())
+    # fwd (1 dot) + bwd (2 dots) per step
+    assert hc.flops == pytest.approx(3 * 10 * 2 * 8 * 64 * 64, rel=0.01)
+
+
+def test_bytes_reasonable_for_copy():
+    c = _compile(lambda x: x * 2.0, jax.ShapeDtypeStruct((1024, 1024), jnp.float32))
+    hc = hlo_cost.analyze(c.as_text())
+    nbytes = 1024 * 1024 * 4
+    # read + write, within fusion-accounting slack
+    assert nbytes <= hc.bytes_accessed <= 6 * nbytes
+
+
+def test_tuple_collective_parse():
+    hlo = """
+HloModule m
+
+ENTRY %main.1 (a: f32[64,64]) -> f32[64,64] {
+  %a = f32[64,64]{1,0} parameter(0)
+  %ar = (f32[64,64]{1,0}, f32[32,16]{1,0}) all-reduce(%a, %a), replica_groups={}, to_apply=%add
+  ROOT %out = f32[64,64]{1,0} get-tuple-element(%ar), index=0
+}
+"""
+    hc = hlo_cost.analyze(hlo)
+    want = (64 * 64 * 4 + 32 * 16 * 4) * 2.0  # wire factor 2 for all-reduce
+    assert hc.coll_wire_bytes == want

@@ -1,0 +1,143 @@
+"""The algorithm family: equivalences, affinity semantics, convergence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import consensus as cl
+from repro.core import p2p
+
+
+def _quad_loss(params, batch):
+    """Per-peer quadratic: ||w - target||^2; batch carries the target."""
+    return jnp.sum(jnp.square(params["w"] - batch))
+
+
+def _init_fn(key):
+    return {"w": jax.random.normal(key, (4,))}
+
+
+def _batches(targets, t, k):
+    return jnp.broadcast_to(jnp.asarray(targets, jnp.float32), (t, k, 4))
+
+
+def test_dsgd_is_special_case():
+    """p2pl_affinity with S=T=1, mu=0, eta_d=eta_b=0 == dsgd exactly."""
+    cfg_a = p2p.P2PConfig(algorithm="p2pl_affinity", num_peers=3, local_steps=1,
+                          consensus_steps=1, lr=0.1, eta_d=0.0, eta_b=0.0,
+                          max_norm_init=True)
+    cfg_d = p2p.P2PConfig(algorithm="dsgd", num_peers=3, local_steps=1,
+                          consensus_steps=1, lr=0.1, max_norm_init=True)
+    rng = jax.random.PRNGKey(0)
+    s_a = p2p.init_state(rng, _init_fn, cfg_a)
+    s_d = p2p.init_state(rng, _init_fn, cfg_d)
+    targets = np.random.default_rng(0).normal(size=(3, 4))
+    batches = _batches(targets, 1, 3)
+    fn_a = p2p.make_round_fn(_quad_loss, cfg_a)
+    fn_d = p2p.make_round_fn(_quad_loss, cfg_d)
+    _, a, _ = fn_a(s_a, batches)
+    _, d, _ = fn_d(s_d, batches)
+    np.testing.assert_allclose(a.params["w"], d.params["w"], atol=1e-6)
+
+
+def test_isolated_never_mixes():
+    cfg = p2p.P2PConfig(algorithm="isolated", num_peers=2, local_steps=3,
+                        consensus_steps=0, lr=0.1, topology="disconnected",
+                        mixing="identity")
+    rng = jax.random.PRNGKey(1)
+    state = p2p.init_state(rng, _init_fn, cfg)
+    targets = np.array([[1.0] * 4, [-1.0] * 4])
+    fn = p2p.make_round_fn(_quad_loss, cfg)
+    for _ in range(30):
+        _, state, _ = fn(state, _batches(targets, 3, 2))
+    # peers converge to their own disparate targets — drift stays large
+    np.testing.assert_allclose(state.params["w"][0], 1.0, atol=1e-2)
+    np.testing.assert_allclose(state.params["w"][1], -1.0, atol=1e-2)
+
+
+def test_consensus_pulls_to_global_minimum():
+    """Non-IID quadratics: with consensus, both peers end at the average."""
+    cfg = p2p.P2PConfig(algorithm="local_dsgd", num_peers=2, local_steps=2,
+                        consensus_steps=1, lr=0.2, topology="complete",
+                        mixing="uniform_neighbor")
+    rng = jax.random.PRNGKey(2)
+    state = p2p.init_state(rng, _init_fn, cfg)
+    targets = np.array([[1.0] * 4, [-1.0] * 4])  # global min = 0
+    fn = p2p.make_round_fn(_quad_loss, cfg)
+    for _ in range(150):
+        _, state, _ = fn(state, _batches(targets, 2, 2))
+    drift = float(cl.pairwise_drift(state.params))
+    assert drift < 0.5
+    # consensus point is near the average of the two optima (0)
+    assert float(jnp.abs(state.params["w"]).max()) < 0.7
+
+
+def test_affinity_d_reduces_local_drift():
+    """The d bias pulls peers together during LOCAL training (Sec. V-C)."""
+
+    def run(algorithm, eta_d):
+        cfg = p2p.P2PConfig(algorithm=algorithm, num_peers=2, local_steps=8,
+                            consensus_steps=1, lr=0.1, eta_d=eta_d,
+                            topology="complete", max_norm_init=True)
+        rng = jax.random.PRNGKey(3)
+        state = p2p.init_state(rng, _init_fn, cfg)
+        targets = np.array([[2.0] * 4, [-2.0] * 4])
+        fn = p2p.make_round_fn(_quad_loss, cfg)
+        drifts = []
+        for _ in range(10):
+            after_local, state, _ = fn(state, _batches(targets, 8, 2))
+            drifts.append(float(cl.pairwise_drift(after_local.params)))
+        return np.mean(drifts[2:])  # skip rounds before d is first updated
+
+    drift_plain = run("local_dsgd", 0.0)
+    drift_affinity = run("p2pl_affinity", 1.0)
+    assert drift_affinity < drift_plain
+
+
+def test_affinity_b_zero_matches_paper_setting():
+    """Sec. V-C uses b = 0: eta_b=0 must equal an explicit zero-b run."""
+    common = dict(algorithm="p2pl_affinity", num_peers=2, local_steps=2,
+                  consensus_steps=1, lr=0.1, eta_d=1.0, max_norm_init=True)
+    cfg0 = p2p.P2PConfig(eta_b=0.0, **common)
+    rng = jax.random.PRNGKey(4)
+    s0 = p2p.init_state(rng, _init_fn, cfg0)
+    targets = np.array([[1.0] * 4, [-1.0] * 4])
+    fn0 = p2p.make_round_fn(_quad_loss, cfg0)
+    _, out0, _ = fn0(s0, _batches(targets, 2, 2))
+    assert np.all(np.asarray(out0.b_bias["w"]) == 0.0)
+
+
+def test_momentum_polyak_formula():
+    """buf = mu*buf + g; w -= lr*buf (PyTorch default, as in the paper)."""
+    cfg = p2p.P2PConfig(algorithm="local_dsgd", num_peers=1, local_steps=2,
+                        consensus_steps=1, lr=0.1, momentum=0.5,
+                        topology="complete", mixing="identity")
+    state = p2p.init_state(jax.random.PRNGKey(5), _init_fn, cfg)
+    w0 = np.asarray(state.params["w"][0]).copy()
+    target = np.zeros((1, 4))
+    fn = p2p.make_round_fn(_quad_loss, cfg)
+    _, out, _ = fn(state, _batches(target, 2, 1))
+    # manual: g = 2w; buf1 = 2w0; w1 = w0 - .1*2w0 = .8 w0
+    # g2 = 2*.8w0; buf2 = .5*2w0 + 1.6w0 = 2.6w0; w2 = .8w0 - .26w0 = .54w0
+    np.testing.assert_allclose(out.params["w"][0], 0.54 * w0, rtol=1e-5)
+
+
+def test_max_norm_init_only_for_p2pl():
+    cfg = p2p.P2PConfig(algorithm="p2pl", num_peers=3, local_steps=2,
+                        consensus_steps=1, momentum=0.5)
+    state = p2p.init_state(jax.random.PRNGKey(6), _init_fn, cfg)
+    w = np.asarray(state.params["w"])
+    assert np.allclose(w[0], w[1]) and np.allclose(w[1], w[2])
+    cfg2 = p2p.P2PConfig(algorithm="local_dsgd", num_peers=3, local_steps=2)
+    state2 = p2p.init_state(jax.random.PRNGKey(6), _init_fn, cfg2)
+    w2 = np.asarray(state2.params["w"])
+    assert not np.allclose(w2[0], w2[1])
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        p2p.P2PConfig(algorithm="dsgd", local_steps=5)
+    with pytest.raises(ValueError):
+        p2p.P2PConfig(algorithm="nope")
+    with pytest.raises(ValueError):
+        p2p.P2PConfig(algorithm="isolated", consensus_steps=2)

@@ -1,0 +1,131 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import consensus as cl
+from repro.core import graph as gl
+from repro.models import common
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    k=st.integers(2, 8),
+    topo=st.sampled_from(["complete", "ring", "star", "chain"]),
+    seed=st.integers(0, 100),
+)
+def test_mixing_preserves_consensus_and_mean_bounds(k, topo, seed):
+    """Gossip never moves params outside the convex hull of peer values."""
+    g = gl.build_graph(topo, k)
+    w = jnp.asarray(gl.mixing_matrix(g, "metropolis"), jnp.float32)
+    x = jnp.asarray(np.random.default_rng(seed).normal(size=(k, 6)), jnp.float32)
+    out = np.asarray(cl.mix_stacked(w, {"x": x})["x"])
+    assert (out.min(0) >= np.asarray(x).min(0) - 1e-5).all()
+    assert (out.max(0) <= np.asarray(x).max(0) + 1e-5).all()
+    # metropolis is doubly stochastic: the mean is invariant
+    np.testing.assert_allclose(out.mean(0), np.asarray(x).mean(0), atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    k=st.integers(2, 6),
+    steps=st.integers(1, 30),
+    seed=st.integers(0, 100),
+)
+def test_consensus_error_monotone_under_gossip(k, steps, seed):
+    g = gl.build_graph("complete", k)
+    w = jnp.asarray(gl.mixing_matrix(g, "metropolis"), jnp.float32)
+    x = {"x": jnp.asarray(np.random.default_rng(seed).normal(size=(k, 4)), jnp.float32)}
+    errs = [float(cl.consensus_error(x))]
+    for _ in range(steps):
+        x = cl.mix_stacked(w, x)
+        errs.append(float(cl.consensus_error(x)))
+    assert all(b <= a + 1e-6 for a, b in zip(errs, errs[1:]))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    s=st.integers(2, 32),
+    d=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 1000),
+)
+def test_rope_preserves_norm_and_relative_angle(s, d, seed):
+    x = jnp.asarray(np.random.default_rng(seed).normal(size=(1, s, d)), jnp.float32)
+    pos = jnp.arange(s, dtype=jnp.int32)[None]
+    y = common.apply_rope(x, pos)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(y), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1),
+        rtol=1e-4,
+    )
+    # relative property: <R(p)q, R(p+o)k> depends only on o
+    q = jnp.asarray(np.random.default_rng(seed + 1).normal(size=(1, 1, d)), jnp.float32)
+    kk = jnp.asarray(np.random.default_rng(seed + 2).normal(size=(1, 1, d)), jnp.float32)
+    off = 3
+    dots = []
+    for p in (0, 5):
+        qr = common.apply_rope(q, jnp.asarray([[p]], jnp.int32))
+        kr = common.apply_rope(kk, jnp.asarray([[p + off]], jnp.int32))
+        dots.append(float(jnp.sum(qr * kr)))
+    assert abs(dots[0] - dots[1]) < 1e-3
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(2, 64),
+    v=st.integers(3, 50),
+    seed=st.integers(0, 1000),
+)
+def test_cross_entropy_bounds(n, v, seed):
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.normal(size=(1, n, v)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, v, size=(1, n)), jnp.int32)
+    loss = float(common.cross_entropy_loss(logits, labels))
+    assert loss >= 0.0
+    # perfect prediction drives loss to ~0
+    perfect = jnp.full((1, n, v), -30.0).at[0, jnp.arange(n), labels[0]].set(30.0)
+    assert float(common.cross_entropy_loss(perfect, labels)) < 1e-3
+    # ignore_id masks out positions
+    masked = labels.at[0, 0].set(-100)
+    assert np.isfinite(float(common.cross_entropy_loss(logits, masked)))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    t=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 100),
+    decay_lo=st.floats(0.01, 1.0),
+)
+def test_wkv_chunk_invariance(t, seed, decay_lo):
+    """Chunked WKV output is invariant to the chunk size."""
+    from repro.kernels.rwkv6.ops import wkv6
+
+    rng = np.random.default_rng(seed)
+    b, h, dk = 1, 2, 8
+    r = jnp.asarray(rng.normal(size=(b, t, h, dk)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, t, h, dk)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, t, h, dk)), jnp.float32)
+    ld = -jnp.asarray(rng.uniform(decay_lo, 3.0, size=(b, t, h, dk)), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(h, dk)), jnp.float32)
+    outs = [np.asarray(wkv6(r, k, v, ld, u, chunk=c)) for c in (4, 8, t)]
+    np.testing.assert_allclose(outs[0], outs[1], atol=5e-4)
+    np.testing.assert_allclose(outs[0], outs[2], atol=5e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    ng=st.integers(8, 512),
+    e=st.sampled_from([4, 8, 16, 64]),
+    k=st.integers(1, 4),
+    cf=st.floats(0.5, 4.0),
+)
+def test_moe_capacity_invariants(ng, e, k, cf):
+    from repro.configs.base import MoEConfig
+    from repro.models import moe
+
+    cfg = MoEConfig(num_experts=e, top_k=k, expert_ff=4, capacity_factor=cf)
+    c = moe.capacity(cfg, ng)
+    assert c % 8 == 0 and c >= 8
+    assert c * e >= ng * k * cf * 0.99  # capacity covers the requested factor
