@@ -20,15 +20,16 @@ def main(argv=None) -> None:
 
     from benchmarks.figures import ALL_FIGURES
     from benchmarks.kernels import ALL_KERNELS
+    from benchmarks.schedules import ALL_SCHEDULES
 
     only = set(args.only.split(",")) if args.only else None
     failures = 0
     print("name,us_per_call,derived")
-    for name, fn in {**ALL_KERNELS, **ALL_FIGURES}.items():
+    for name, fn in {**ALL_KERNELS, **ALL_FIGURES, **ALL_SCHEDULES}.items():
         if only and name not in only:
             continue
         try:
-            out = fn(args.full) if name in ALL_FIGURES else fn()
+            out = fn(args.full) if name not in ALL_KERNELS else fn()
             for row_name, us, derived in out:
                 print(f"{row_name},{us:.1f},{derived}", flush=True)
         except Exception:  # noqa: BLE001

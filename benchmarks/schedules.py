@@ -1,0 +1,92 @@
+"""The scenario axis: static vs time-varying communication graphs.
+
+One row per (schedule, metric):
+- mean per-round spectral gap of W_t (connectivity actually available),
+- consensus error after one schedule period of pure gossip from a common
+  random start (how much mixing the schedule delivers),
+- unseen-class oscillation amplitude of a short K=2 non-IID training run
+  (the paper's sawtooth, now under link churn).
+
+`full=True` scales data/rounds up; the derived numbers are what
+EXPERIMENTS.md quotes for the schedule comparison.
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.p2pl_mnist import timevarying_k2
+from repro.core import consensus as consensus_lib
+from repro.core import graph as graph_lib
+from repro.core import p2p
+from repro.data import synthetic
+from repro.launch.train import run_paper_experiment
+
+K_GOSSIP = 16  # peers for the pure-gossip metrics
+
+
+def _schedules(rounds: int, seed: int = 0) -> dict[str, graph_lib.GraphSchedule]:
+    base = graph_lib.build_graph("ring", K_GOSSIP)
+    return {
+        "static_ring": graph_lib.static_schedule(base),
+        "link_dropout": graph_lib.link_dropout_schedule(base, 0.7, rounds, seed=seed),
+        "random_matching": graph_lib.random_matching_schedule(K_GOSSIP, rounds, seed=seed),
+        "peer_churn": graph_lib.peer_churn_schedule(base, 0.8, rounds, seed=seed),
+    }
+
+
+def _gossip_metrics(
+    sched: graph_lib.GraphSchedule, rounds: int
+) -> tuple[float, float, float]:
+    w, _ = graph_lib.schedule_matrices(sched, "metropolis")
+    gaps = [graph_lib.spectral_gap(w[t % sched.period]) for t in range(rounds)]
+    # A single time-varying round is often disconnected (gap 0); what governs
+    # convergence is the product of the round matrices over one period.
+    prod = np.linalg.multi_dot(list(w)) if sched.period > 1 else w[0]
+    period_gap = graph_lib.spectral_gap(prod)
+    x = {"x": jnp.asarray(np.random.default_rng(0).normal(size=(K_GOSSIP, 64)), jnp.float32)}
+    for t in range(rounds):
+        x = consensus_lib.mix_stacked(jnp.asarray(w[t % sched.period], jnp.float32), x)
+    return float(np.mean(gaps)), period_gap, float(consensus_lib.consensus_error(x))
+
+
+def schedule_gossip(full=False):
+    """Pure-gossip comparison: spectral gaps + consensus error per schedule."""
+    rounds = 64 if full else 16
+    out = []
+    for name, sched in _schedules(rounds).items():
+        t0 = time.time()
+        gap, period_gap, err = _gossip_metrics(sched, rounds)
+        us = (time.time() - t0) / rounds * 1e6
+        out.append((f"sched_{name}_mean_spectral_gap", us, gap))
+        out.append((f"sched_{name}_period_product_gap", us, period_gap))
+        out.append((f"sched_{name}_consensus_error_{rounds}r", us, err))
+    return out
+
+
+def schedule_training(full=False):
+    """K=2 non-IID training under static vs time-varying links: oscillation."""
+    rounds = 40 if full else 10
+    data = synthetic.mnist_like(20000 if full else 6000, 4000 if full else 1500)
+    out = []
+    for schedule in ("static", "link_dropout", "random_matching"):
+        exp = timevarying_k2(schedule, "local_dsgd", 10, link_survival_prob=0.7)
+        t0 = time.time()
+        log = run_paper_experiment(exp, rounds=rounds, data=data)
+        us = (time.time() - t0) / rounds * 1e6
+        sched = p2p.build_schedule(exp.p2p)
+        out.append((f"sched_train_{schedule}_unseen_osc", us,
+                    log.mean_oscillation("peer1_seen")))
+        out.append((f"sched_train_{schedule}_final_all_acc", us,
+                    log.final_accuracy("all")))
+        out.append((f"sched_train_{schedule}_union_connected", us,
+                    float(sched.union_is_connected())))
+    return out
+
+
+ALL_SCHEDULES = {
+    "sched_gossip": schedule_gossip,
+    "sched_train": schedule_training,
+}

@@ -39,6 +39,87 @@ def iid_k100(topology: str = "complete") -> PaperExperiment:
     )
 
 
+def timevarying_k2(
+    schedule: str = "link_dropout",
+    algorithm: str = "p2pl_affinity",
+    local_steps: int = 10,
+    *,
+    schedule_rounds: int = 16,
+    link_survival_prob: float = 0.7,
+    peer_online_prob: float = 0.8,
+    schedule_seed: int = 0,
+) -> PaperExperiment:
+    """Beyond-paper: the K=2 non-IID workload over a churning link.
+
+    With ``link_dropout`` the single A-B edge vanishes on ~(1-q) of rounds —
+    those rounds behave like isolated training, so consensus (and the
+    sawtooth) only happens when the link is up.  eta_d=0.5 for the affinity
+    variant (observation O1: 1.0 is marginally stable at K=2 full averaging).
+    """
+    return PaperExperiment(
+        name=f"timevarying_k2_{schedule}_{algorithm}_T{local_steps}",
+        p2p=P2PConfig(
+            algorithm=algorithm,
+            num_peers=2,
+            local_steps=local_steps,
+            consensus_steps=1,
+            lr=0.01,
+            momentum=0.0,
+            eta_d=0.5,
+            topology="complete",
+            mixing="data_weighted",
+            schedule=schedule,
+            schedule_rounds=schedule_rounds,
+            link_survival_prob=link_survival_prob,
+            peer_online_prob=peer_online_prob,
+            schedule_seed=schedule_seed,
+        ),
+        batch_size=10,
+        samples_per_class=50,
+        rounds=60,
+        peer_classes=((0, 1), (7, 8)),
+    )
+
+
+def timevarying_k8(
+    schedule: str = "random_matching",
+    algorithm: str = "p2pl_affinity",
+    local_steps: int = 10,
+    *,
+    schedule_rounds: int = 16,
+    link_survival_prob: float = 0.7,
+    peer_online_prob: float = 0.8,
+    schedule_seed: int = 0,
+) -> PaperExperiment:
+    """Beyond-paper: 8 peers, 2 classes each, gossiping over a time-varying
+    graph (pairwise random matchings, dropped links, or peer churn on a
+    ring)."""
+    peer_classes = tuple(((2 * k) % 10, (2 * k + 1) % 10) for k in range(8))
+    return PaperExperiment(
+        name=f"timevarying_k8_{schedule}_{algorithm}_T{local_steps}",
+        p2p=P2PConfig(
+            algorithm=algorithm,
+            num_peers=8,
+            local_steps=local_steps,
+            consensus_steps=1,
+            lr=0.01,
+            momentum=0.0,
+            eta_d=0.5,
+            topology="ring",
+            mixing="data_weighted",
+            schedule=schedule,
+            schedule_rounds=schedule_rounds,
+            link_survival_prob=link_survival_prob,
+            peer_online_prob=peer_online_prob,
+            schedule_seed=schedule_seed,
+        ),
+        batch_size=10,
+        samples_per_class=50,
+        rounds=60,
+        peer_classes=peer_classes,
+    )
+
+
 def noniid_k2(algorithm: str = "local_dsgd", local_steps: int = 10) -> PaperExperiment:
     """Fig. 3cd/6: K=2, pathological non-IID (A: {0,1}, B: {7,8})."""
     return PaperExperiment(

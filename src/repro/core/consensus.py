@@ -48,16 +48,34 @@ def mix_stacked(w_mat: jax.Array, stacked: PyTree) -> PyTree:
 # ---------------------------------------------------------------------------
 
 
-def sparse_mixing(w_mat: np.ndarray) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+def mixing_degrees(w_mat: np.ndarray) -> np.ndarray:
+    """Per-peer neighbor count of a dense mixing matrix: off-diagonal nonzeros.
+
+    The single definition of sparsity shared by ``sparse_mixing`` and the
+    schedule-wide padding in ``consensus_mix.ops.sparse_from_schedule``.
+    """
+    off_diag = w_mat - np.diag(np.diag(w_mat))
+    return (off_diag != 0).sum(axis=1)
+
+
+def sparse_mixing(
+    w_mat: np.ndarray, *, dmax: int | None = None
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Convert a dense mixing matrix to padded (self_w, nbr_idx, nbr_w).
 
     nbr_idx: (K, Dmax) int32, padded with the peer's own index (weight 0).
     Returns numpy arrays — static per topology, closed over by jit.
+    ``dmax`` overrides the padding width so every round of a time-varying
+    schedule shares one shape (the max degree across the schedule).
     """
     k = w_mat.shape[0]
     off_diag = w_mat - np.diag(np.diag(w_mat))
-    deg = (off_diag != 0).sum(axis=1)
-    dmax = max(int(deg.max()), 1) if k else 1
+    deg = mixing_degrees(w_mat)
+    need = max(int(deg.max()), 1) if k else 1
+    if dmax is None:
+        dmax = need
+    elif dmax < need:
+        raise ValueError(f"dmax={dmax} below the actual max degree {need}")
     nbr_idx = np.tile(np.arange(k, dtype=np.int32)[:, None], (1, dmax))
     nbr_w = np.zeros((k, dmax), dtype=np.float32)
     for i in range(k):
@@ -109,7 +127,9 @@ def mix_ring(
     x: PyTree, axis_name: str, *, self_weight: float, left_weight: float, right_weight: float
 ) -> PyTree:
     """Ring-graph gossip: two collective_permutes + weighted sum."""
-    n = jax.lax.axis_size(axis_name)
+    # axis size via the psum-of-1 identity (jax.lax.axis_size is not
+    # available on every supported jax version)
+    n = jax.lax.psum(1, axis_name)
     fwd = [(i, (i + 1) % n) for i in range(n)]
     bwd = [((i + 1) % n, i) for i in range(n)]
 

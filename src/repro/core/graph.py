@@ -222,6 +222,168 @@ def affinity_matrix(graph: CommGraph, *, data_sizes: Sequence[int] | None = None
     return b
 
 
+# ---------------------------------------------------------------------------
+# Time-varying graph schedules
+# ---------------------------------------------------------------------------
+
+SCHEDULES = ("static", "link_dropout", "random_matching", "peer_churn", "round_robin")
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphSchedule:
+    """A periodic sequence of communication graphs, one per round.
+
+    Round ``r`` communicates over ``graphs[r % period]``.  A period-1 schedule
+    is exactly the paper's fixed-topology setting; longer periods model churn:
+    links dropping (Sparse-Push-style time-varying graphs), gossip pairs
+    re-sampled every round, or peers going offline.  All graphs must share the
+    same peer count; individual rounds MAY be disconnected (consensus then
+    relies on connectivity of the union over a window, the standard
+    B-connectivity assumption of time-varying consensus analyses).
+    """
+
+    graphs: tuple[CommGraph, ...]
+    name: str = "static"
+
+    def __post_init__(self):
+        graphs = tuple(self.graphs)
+        if not graphs:
+            raise ValueError("schedule needs at least one graph")
+        k = graphs[0].num_peers
+        if any(g.num_peers != k for g in graphs):
+            raise ValueError("all graphs in a schedule must share the peer count")
+        object.__setattr__(self, "graphs", graphs)
+
+    @property
+    def period(self) -> int:
+        return len(self.graphs)
+
+    @property
+    def num_peers(self) -> int:
+        return self.graphs[0].num_peers
+
+    def graph_at(self, round_idx: int) -> CommGraph:
+        return self.graphs[round_idx % self.period]
+
+    def max_degree(self) -> int:
+        """Max degree over all rounds — the padding width for sparse kernels."""
+        return max(g.max_degree() for g in self.graphs)
+
+    def union_graph(self) -> CommGraph:
+        """OR of all adjacencies: the B-connectivity window of one period."""
+        adj = np.zeros((self.num_peers, self.num_peers), dtype=bool)
+        for g in self.graphs:
+            adj |= g.adjacency
+        return CommGraph(adj)
+
+    def union_is_connected(self) -> bool:
+        return self.union_graph().is_connected()
+
+
+def static_schedule(graph: CommGraph) -> GraphSchedule:
+    """Period-1 wrapper — backwards-compatible fixed topology."""
+    return GraphSchedule((graph,), name="static")
+
+
+def link_dropout_schedule(
+    base: CommGraph, survival_prob: float, rounds: int, *, seed: int = 0
+) -> GraphSchedule:
+    """Each base edge independently survives each round with prob ``survival_prob``."""
+    if not 0.0 < survival_prob <= 1.0:
+        raise ValueError("survival_prob must be in (0, 1]")
+    if rounds < 1:
+        raise ValueError("need at least one round")
+    rng = np.random.default_rng(seed)
+    k = base.num_peers
+    iu, ju = np.triu_indices(k, 1)
+    edge_mask = base.adjacency[iu, ju]
+    graphs = []
+    for _ in range(rounds):
+        keep = edge_mask & (rng.random(len(iu)) < survival_prob)
+        a = np.zeros((k, k), dtype=bool)
+        a[iu[keep], ju[keep]] = True
+        graphs.append(CommGraph(a | a.T))
+    return GraphSchedule(tuple(graphs), name="link_dropout")
+
+
+def random_matching_schedule(num_peers: int, rounds: int, *, seed: int = 0) -> GraphSchedule:
+    """One-peer pairwise gossip: a random perfect matching per round.
+
+    Every peer talks to at most one partner per round (classic randomized
+    gossip); with odd ``num_peers`` one peer idles (self-loop via its own
+    mixing weight).
+    """
+    if num_peers < 2:
+        raise ValueError("matching needs at least two peers")
+    if rounds < 1:
+        raise ValueError("need at least one round")
+    rng = np.random.default_rng(seed)
+    graphs = []
+    for _ in range(rounds):
+        perm = rng.permutation(num_peers)
+        a = np.zeros((num_peers, num_peers), dtype=bool)
+        for p in range(0, num_peers - 1, 2):
+            i, j = perm[p], perm[p + 1]
+            a[i, j] = a[j, i] = True
+        graphs.append(CommGraph(a))
+    return GraphSchedule(tuple(graphs), name="random_matching")
+
+
+def peer_churn_schedule(
+    base: CommGraph, online_prob: float, rounds: int, *, seed: int = 0
+) -> GraphSchedule:
+    """Peers go offline/online per round; offline peers lose all their edges.
+
+    An offline peer keeps training locally but neither sends nor receives —
+    its mixing row degenerates to the self-loop (weight 1) and its affinity
+    row to zero, so its parameters and d bias are untouched by consensus.
+    """
+    if not 0.0 < online_prob <= 1.0:
+        raise ValueError("online_prob must be in (0, 1]")
+    if rounds < 1:
+        raise ValueError("need at least one round")
+    rng = np.random.default_rng(seed)
+    k = base.num_peers
+    graphs = []
+    for _ in range(rounds):
+        online = rng.random(k) < online_prob
+        a = base.adjacency & online[:, None] & online[None, :]
+        graphs.append(CommGraph(a))
+    return GraphSchedule(tuple(graphs), name="peer_churn")
+
+
+def round_robin_schedule(graphs: Sequence[CommGraph]) -> GraphSchedule:
+    """Cycle deterministically over a fixed list of graphs."""
+    return GraphSchedule(tuple(graphs), name="round_robin")
+
+
+def schedule_matrices(
+    schedule: GraphSchedule,
+    mixing: str = "data_weighted",
+    *,
+    data_sizes: Sequence[int] | None = None,
+    consensus_step_size: float | np.ndarray = 1.0,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Stacked per-round mixing/affinity matrices: (R, K, K) W and Beta.
+
+    Row ``r`` is the mixing matrix of ``schedule.graphs[r]`` under the same
+    weighting rule; the jitted runtime indexes this stack with
+    ``round_idx % R`` so every round reuses one compiled program.
+    """
+    w = np.stack(
+        [
+            mixing_matrix(
+                g, mixing, data_sizes=data_sizes, consensus_step_size=consensus_step_size
+            )
+            for g in schedule.graphs
+        ]
+    )
+    beta = np.stack(
+        [affinity_matrix(g, data_sizes=data_sizes) for g in schedule.graphs]
+    )
+    return w, beta
+
+
 def spectral_gap(w: np.ndarray) -> float:
     """1 - |lambda_2| of the mixing matrix — the consensus rate.
 

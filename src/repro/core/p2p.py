@@ -58,6 +58,13 @@ class P2PConfig:
     max_norm_init: bool = False
     erdos_renyi_p: float = 0.3
     graph_seed: int = 0
+    # -- time-varying communication (GraphSchedule) -------------------------
+    schedule: str = "static"  # one of graph_lib.SCHEDULES
+    schedule_rounds: int = 16  # period R of a stochastic schedule (cycled)
+    link_survival_prob: float = 0.8  # q for schedule="link_dropout"
+    peer_online_prob: float = 0.8  # for schedule="peer_churn"
+    schedule_seed: int = 0
+    round_robin_topologies: tuple = ()  # named topologies for "round_robin"
 
     def __post_init__(self):
         if self.algorithm not in ALGORITHMS:
@@ -68,6 +75,14 @@ class P2PConfig:
             raise ValueError("isolated fixes S = 0")
         if self.local_steps < 1:
             raise ValueError("need at least one local step per round")
+        if self.schedule not in graph_lib.SCHEDULES:
+            raise ValueError(
+                f"unknown schedule {self.schedule!r}; one of {graph_lib.SCHEDULES}"
+            )
+        if self.schedule_rounds < 1:
+            raise ValueError("schedule_rounds must be >= 1")
+        if self.schedule == "round_robin" and not self.round_robin_topologies:
+            raise ValueError("round_robin schedule needs round_robin_topologies")
 
     @property
     def use_affinity_d(self) -> bool:
@@ -92,18 +107,48 @@ class P2PState(NamedTuple):
     round_idx: jax.Array  # scalar int32
 
 
+def build_schedule(cfg: P2PConfig) -> graph_lib.GraphSchedule:
+    """The config's communication-graph schedule (period 1 for "static")."""
+    build = lambda topo: graph_lib.build_graph(  # noqa: E731
+        topo, cfg.num_peers, p=cfg.erdos_renyi_p, seed=cfg.graph_seed
+    )
+    if cfg.schedule == "static":
+        return graph_lib.static_schedule(build(cfg.topology))
+    if cfg.schedule == "link_dropout":
+        return graph_lib.link_dropout_schedule(
+            build(cfg.topology), cfg.link_survival_prob, cfg.schedule_rounds,
+            seed=cfg.schedule_seed,
+        )
+    if cfg.schedule == "random_matching":
+        return graph_lib.random_matching_schedule(
+            cfg.num_peers, cfg.schedule_rounds, seed=cfg.schedule_seed
+        )
+    if cfg.schedule == "peer_churn":
+        return graph_lib.peer_churn_schedule(
+            build(cfg.topology), cfg.peer_online_prob, cfg.schedule_rounds,
+            seed=cfg.schedule_seed,
+        )
+    # round_robin (validated in __post_init__)
+    return graph_lib.round_robin_schedule(
+        [build(t) for t in cfg.round_robin_topologies]
+    )
+
+
 def mixing_constants(
     cfg: P2PConfig, data_sizes: np.ndarray | None = None
-) -> tuple[np.ndarray, np.ndarray, graph_lib.CommGraph]:
-    """Static (W, Beta, graph) for a config. Computed in numpy, closed over by jit."""
-    g = graph_lib.build_graph(
-        cfg.topology, cfg.num_peers, p=cfg.erdos_renyi_p, seed=cfg.graph_seed
+) -> tuple[np.ndarray, np.ndarray, graph_lib.GraphSchedule]:
+    """Stacked per-round (W, Beta, schedule) for a config.
+
+    Returns (R, K, K) numpy stacks — R = 1 for the static schedule — that the
+    jitted round fn closes over and indexes with ``round_idx % R``, so a
+    time-varying run still compiles exactly once.
+    """
+    sched = build_schedule(cfg)
+    w, beta = graph_lib.schedule_matrices(
+        sched, cfg.mixing, data_sizes=data_sizes,
+        consensus_step_size=cfg.consensus_step_size,
     )
-    w = graph_lib.mixing_matrix(
-        g, cfg.mixing, data_sizes=data_sizes, consensus_step_size=cfg.consensus_step_size
-    )
-    beta = graph_lib.affinity_matrix(g, data_sizes=data_sizes)
-    return w, beta, g
+    return w, beta, sched
 
 
 def init_state(rng: jax.Array, init_fn: Callable[[jax.Array], PyTree], cfg: P2PConfig) -> P2PState:
@@ -184,13 +229,23 @@ def consensus_phase(
         return state._replace(round_idx=state.round_idx + 1)
 
     params, d_bias = state.params, state.d_bias
+    # Peers whose beta row is all-zero (isolated this round — e.g. churned
+    # out of a time-varying schedule) have no neighbors to be biased toward:
+    # their d stays 0 rather than decaying toward the origin.
+    has_nbrs = jnp.sum(beta_mat, axis=1) > 0  # (K,)
     for _ in range(cfg.consensus_steps):
         if cfg.use_affinity_d:
             # d_k <- (1/T) sum_j beta_kj (w_j - w_k), from the *incoming*
             # neighbor parameters of this consensus step (Sec. IV-A).
             nbr_avg = consensus_lib.mix_stacked(beta_mat, params)
             d_bias = jax.tree.map(
-                lambda avg, w: (avg - w) / cfg.local_steps, nbr_avg, params
+                lambda avg, w: jnp.where(
+                    has_nbrs.reshape((-1,) + (1,) * (w.ndim - 1)),
+                    (avg - w) / cfg.local_steps,
+                    jnp.zeros_like(w),
+                ),
+                nbr_avg,
+                params,
             )
         mixed = consensus_lib.mix_stacked(w_mat, params)
         if cfg.use_affinity_b:
@@ -222,14 +277,21 @@ def run_round(
 
 
 def make_round_fn(loss_fn: LossFn, cfg: P2PConfig, data_sizes: np.ndarray | None = None):
-    """jit-compiled round closure over static mixing constants."""
+    """jit-compiled round closure over the (possibly time-varying) schedule.
+
+    The full (R, K, K) W/Beta stacks are closed over as device constants and
+    indexed with ``round_idx % R`` *inside* the jitted program: one compile
+    covers every round of a time-varying run, with no per-round host sync.
+    """
     w_np, beta_np, _ = mixing_constants(cfg, data_sizes)
-    w_mat = jnp.asarray(w_np, jnp.float32)
-    beta_mat = jnp.asarray(beta_np, jnp.float32)
+    w_sched = jnp.asarray(w_np, jnp.float32)  # (R, K, K)
+    beta_sched = jnp.asarray(beta_np, jnp.float32)
+    period = w_sched.shape[0]
 
     @jax.jit
     def round_fn(state: P2PState, batches: PyTree):
-        return run_round(state, loss_fn, batches, cfg, w_mat, beta_mat)
+        idx = jax.lax.rem(state.round_idx, jnp.int32(period))
+        return run_round(state, loss_fn, batches, cfg, w_sched[idx], beta_sched[idx])
 
     return round_fn
 

@@ -36,7 +36,11 @@ def _kernel(x_ref, nbrs_ref, w_self_ref, w_nbr_ref, beta_ref, inv_t_ref,
     mixed = w_self * x + jnp.einsum("d,drl->rl", w_nbr, nbrs)
     nbr_avg = jnp.einsum("d,drl->rl", beta, nbrs)
     mixed_ref[...] = mixed.astype(mixed_ref.dtype)
-    d_ref[...] = ((nbr_avg - x) * inv_t).astype(d_ref.dtype)
+    # All-zero beta row = no neighbors this round (e.g. churned-out peer in a
+    # time-varying schedule): the affinity bias stays 0 instead of pulling
+    # the peer toward the origin.
+    d = jnp.where(jnp.sum(beta) > 0.0, (nbr_avg - x) * inv_t, jnp.zeros_like(x))
+    d_ref[...] = d.astype(d_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))

@@ -1,9 +1,13 @@
 """jit'd public API for the fused consensus kernel.
 
-``consensus_mix_flat``   — operates on flattened (N,) parameter vectors.
-``consensus_mix_stacked``— drop-in accelerated form of one gossip step over a
+``consensus_mix_flat``    — operates on flattened (N,) parameter vectors.
+``consensus_mix_stacked`` — drop-in accelerated form of one gossip step over a
 stacked (K, ...) parameter pytree with a sparse (padded-neighbor) mixing
 matrix; used by the P2P runtime when ``use_kernel=True``.
+``consensus_mix_schedule``— time-varying form: selects round ``r % R`` of a
+stacked (R, ...) sparse schedule (built by ``sparse_from_schedule``, padded to
+the schedule-wide max degree) inside the traced program, so every round of a
+churning topology reuses one compiled kernel.
 
 On CPU the kernel runs in interpret mode (the TPU path flips interpret=False).
 """
@@ -106,17 +110,61 @@ def consensus_mix_stacked(
     return unflatten_pytree(stacked, mixed), unflatten_pytree(stacked, d)
 
 
-def sparse_from_matrices(w_mat: np.ndarray, beta_mat: np.ndarray):
-    """Static (self_w, nbr_idx, nbr_w, beta_padded) from dense W and Beta."""
-    self_w, nbr_idx, nbr_w = consensus_lib.sparse_mixing(w_mat)
-    k, dmax = nbr_idx.shape
-    beta_p = np.zeros((k, dmax), np.float32)
-    for i in range(k):
-        for j_pos in range(dmax):
-            beta_p[i, j_pos] = beta_mat[i, nbr_idx[i, j_pos]]
+def sparse_from_matrices(w_mat: np.ndarray, beta_mat: np.ndarray, *, dmax: int | None = None):
+    """Static (self_w, nbr_idx, nbr_w, beta_padded) from dense W and Beta.
+
+    ``dmax`` pads the neighbor axis to a fixed width (weight-0 self-index
+    padding) so rounds of differing degree share one kernel shape.  Padded
+    slots read beta[i, i] = 0, so they contribute nothing to either output.
+    """
+    self_w, nbr_idx, nbr_w = consensus_lib.sparse_mixing(w_mat, dmax=dmax)
+    k = nbr_idx.shape[0]
+    beta_p = beta_mat[np.arange(k)[:, None], nbr_idx].astype(np.float32)
     return (
         jnp.asarray(self_w),
         jnp.asarray(nbr_idx),
         jnp.asarray(nbr_w),
         jnp.asarray(beta_p),
+    )
+
+
+def sparse_from_schedule(w_stack: np.ndarray, beta_stack: np.ndarray):
+    """Stacked sparse form of a (R, K, K) W/Beta schedule.
+
+    Returns (self_w (R, K), nbr_idx (R, K, D), nbr_w (R, K, D), beta (R, K, D))
+    with D = the max degree across *all* rounds, so one kernel shape serves
+    the whole schedule; callers select a round with ``arr[round_idx % R]``.
+    """
+    w_stack = np.asarray(w_stack)
+    beta_stack = np.asarray(beta_stack)
+    rounds = w_stack.shape[0]
+    dmax = max(
+        1, max(int(consensus_lib.mixing_degrees(w_stack[t]).max()) for t in range(rounds))
+    )
+    parts = [
+        sparse_from_matrices(w_stack[t], beta_stack[t], dmax=dmax) for t in range(rounds)
+    ]
+    return tuple(jnp.stack([p[i] for p in parts]) for i in range(4))
+
+
+def consensus_mix_schedule(
+    stacked: PyTree,  # leaves (K, ...)
+    round_idx: jax.Array,  # scalar int
+    self_w_s: jax.Array,  # (R, K)
+    nbr_idx_s: jax.Array,  # (R, K, D)
+    nbr_w_s: jax.Array,  # (R, K, D)
+    beta_s: jax.Array,  # (R, K, D)
+    local_steps: int,
+    *,
+    interpret: bool = True,
+) -> tuple[PyTree, PyTree]:
+    """Schedule-aware gossip step: round ``round_idx`` of a time-varying graph.
+
+    The round's sparse operands are dynamic slices of the stacked schedule,
+    selected inside the traced program — no recompile, no host round-trip.
+    """
+    idx = jax.lax.rem(jnp.asarray(round_idx, jnp.int32), jnp.int32(self_w_s.shape[0]))
+    return consensus_mix_stacked(
+        stacked, self_w_s[idx], nbr_idx_s[idx], nbr_w_s[idx], beta_s[idx],
+        local_steps, interpret=interpret,
     )

@@ -18,5 +18,11 @@ def consensus_mix_ref(x, nbrs, w_self, w_nbr, beta, local_steps: int):
         "d,dn->n", w_nbr.astype(jnp.float32), nf
     )
     nbr_avg = jnp.einsum("d,dn->n", beta.astype(jnp.float32), nf)
-    d_bias = (nbr_avg - xf) / local_steps
+    # all-zero beta (no neighbors this round) => d stays 0, matching the
+    # dense path's isolated-peer semantics
+    d_bias = jnp.where(
+        jnp.sum(beta.astype(jnp.float32)) > 0.0,
+        (nbr_avg - xf) / local_steps,
+        jnp.zeros_like(xf),
+    )
     return mixed.astype(x.dtype), d_bias.astype(x.dtype)

@@ -21,19 +21,24 @@ HBM_BW = 819e9  # B/s
 ICI_BW = 50e9  # B/s per link
 
 
+def _mesh(shape, axes):
+    # jax.sharding.AxisType landed after 0.4.x; older jax defaults to Auto
+    # semantics anyway, so only pass axis_types where it exists.
+    kwargs = {}
+    if hasattr(jax.sharding, "AxisType"):
+        kwargs["axis_types"] = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, **kwargs)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _mesh(shape, axes)
 
 
 def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for CI-scale sharding tests (requires >= prod(shape) devices)."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _mesh(shape, axes)
 
 
 def num_chips(mesh) -> int:

@@ -26,7 +26,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduced
-from repro.configs.p2pl_mnist import PaperExperiment, iid_k100, noniid_k2
+from repro.configs.p2pl_mnist import (
+    PaperExperiment,
+    iid_k100,
+    noniid_k2,
+    timevarying_k2,
+    timevarying_k8,
+)
 from repro.core import consensus as consensus_lib
 from repro.core import metrics as metrics_lib
 from repro.core import p2p
@@ -178,10 +184,20 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--experiment", default="noniid_affinity",
                     choices=["iid_k100", "noniid_local_dsgd", "noniid_affinity",
-                             "noniid_dsgd", "p2p_lm"])
+                             "noniid_dsgd", "p2p_lm",
+                             "timevarying_k2", "timevarying_k8"])
     ap.add_argument("--rounds", type=int, default=None)
     ap.add_argument("--topology", default="complete")
     ap.add_argument("--local-steps", type=int, default=10)
+    ap.add_argument("--schedule", default="link_dropout",
+                    choices=["static", "link_dropout", "random_matching", "peer_churn"],
+                    help="communication-graph schedule for timevarying_* experiments")
+    ap.add_argument("--schedule-rounds", type=int, default=16,
+                    help="period of the stochastic schedule (cycled)")
+    ap.add_argument("--link-survival-prob", type=float, default=0.7)
+    ap.add_argument("--peer-online-prob", type=float, default=0.8)
+    ap.add_argument("--algorithm", default="p2pl_affinity",
+                    help="algorithm for timevarying_* experiments")
     ap.add_argument("--out", default="")
     ap.add_argument("--arch", default="smollm-135m")
     args = ap.parse_args(argv)
@@ -191,7 +207,17 @@ def main(argv=None):
         out = run_p2p_lm(args.arch, rounds=args.rounds or 8, verbose=True)
         print(json.dumps(out))
         return
-    if args.experiment == "iid_k100":
+    if args.experiment in ("timevarying_k2", "timevarying_k8"):
+        builder = timevarying_k2 if args.experiment == "timevarying_k2" else timevarying_k8
+        exp = builder(
+            args.schedule,
+            args.algorithm,
+            args.local_steps,
+            schedule_rounds=args.schedule_rounds,
+            link_survival_prob=args.link_survival_prob,
+            peer_online_prob=args.peer_online_prob,
+        )
+    elif args.experiment == "iid_k100":
         exp = iid_k100(args.topology)
     elif args.experiment == "noniid_local_dsgd":
         exp = noniid_k2("local_dsgd", args.local_steps)

@@ -1,0 +1,137 @@
+"""Kernel-vs-dense parity for the schedule-aware consensus_mix path.
+
+The fused kernel (interpret mode) must match the dense einsum runtime —
+``consensus_lib.mix_stacked`` plus the masked d-bias — on static topologies
+AND on every round of a time-varying schedule, where rounds of differing
+degree share one padded shape and churned-out peers have degree 0.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import consensus as consensus_lib
+from repro.core import graph as gl
+from repro.kernels.consensus_mix import ops as cm_ops
+
+K = 8
+T = 10  # local steps
+
+
+def _tree(rng, k=K):
+    return {
+        "w": jnp.asarray(rng.normal(size=(k, 33)), jnp.float32),
+        "b": jnp.asarray(rng.normal(size=(k, 5, 7)), jnp.float32),
+    }
+
+
+def _dense_reference(w_mat, beta_mat, tree, local_steps=T):
+    """mix_stacked + the d-bias with the isolated-peer (all-zero beta row) mask."""
+    wj = jnp.asarray(w_mat, jnp.float32)
+    bj = jnp.asarray(beta_mat, jnp.float32)
+    mixed = consensus_lib.mix_stacked(wj, tree)
+    nbr_avg = consensus_lib.mix_stacked(bj, tree)
+    has_nbrs = np.asarray(beta_mat).sum(axis=1) > 0
+    d = jax.tree.map(
+        lambda avg, x: np.where(
+            has_nbrs.reshape((-1,) + (1,) * (x.ndim - 1)),
+            (np.asarray(avg, np.float32) - np.asarray(x, np.float32)) / local_steps,
+            0.0,
+        ),
+        nbr_avg,
+        tree,
+    )
+    return mixed, d
+
+
+def _assert_parity(got, want, atol=1e-5):
+    for key in want:
+        np.testing.assert_allclose(
+            np.asarray(got[key]), np.asarray(want[key]), atol=atol, err_msg=key
+        )
+
+
+@pytest.mark.parametrize("topo", ["ring", "star", "erdos_renyi"])
+def test_static_parity(topo, rng):
+    g = gl.build_graph(topo, K)
+    sizes = rng.integers(1, 50, K)
+    w = gl.mixing_matrix(g, "data_weighted", data_sizes=sizes)
+    beta = gl.affinity_matrix(g, data_sizes=sizes)
+    tree = _tree(rng)
+    self_w, nbr_idx, nbr_w, beta_p = cm_ops.sparse_from_matrices(w, beta)
+    got_m, got_d = cm_ops.consensus_mix_stacked(
+        tree, self_w, nbr_idx, nbr_w, beta_p, T
+    )
+    want_m, want_d = _dense_reference(w, beta, tree)
+    _assert_parity(got_m, want_m)
+    _assert_parity(got_d, want_d)
+
+
+def _schedule(name, rounds=6, seed=0):
+    base = gl.build_graph("ring", K)
+    if name == "link_dropout":
+        return gl.link_dropout_schedule(base, 0.6, rounds, seed=seed)
+    if name == "random_matching":
+        return gl.random_matching_schedule(K, rounds, seed=seed)
+    return gl.peer_churn_schedule(base, 0.5, rounds, seed=seed)
+
+
+@pytest.mark.parametrize("name", ["link_dropout", "random_matching", "peer_churn"])
+def test_schedule_parity_every_round(name, rng):
+    """One padded shape serves all rounds; each round matches the dense path."""
+    sched = _schedule(name)
+    sizes = rng.integers(1, 50, K)
+    w_stack, beta_stack = gl.schedule_matrices(sched, "data_weighted", data_sizes=sizes)
+    self_w, nbr_idx, nbr_w, beta_p = cm_ops.sparse_from_schedule(w_stack, beta_stack)
+    assert self_w.shape == (sched.period, K)
+    assert nbr_idx.shape[-1] == max(sched.max_degree(), 1)
+    tree = _tree(rng)
+    for r in range(sched.period):
+        got_m, got_d = cm_ops.consensus_mix_stacked(
+            tree, self_w[r], nbr_idx[r], nbr_w[r], beta_p[r], T
+        )
+        want_m, want_d = _dense_reference(w_stack[r], beta_stack[r], tree)
+        _assert_parity(got_m, want_m)
+        _assert_parity(got_d, want_d)
+
+
+def test_degree0_churned_out_peer(rng):
+    """Offline peers keep their params exactly and get a zero d bias."""
+    sched = _schedule("peer_churn", rounds=8, seed=3)
+    degs = np.stack([g.degree() for g in sched.graphs])
+    assert (degs == 0).any(), "fixture must contain a churned-out peer"
+    w_stack, beta_stack = gl.schedule_matrices(sched, "data_weighted")
+    self_w, nbr_idx, nbr_w, beta_p = cm_ops.sparse_from_schedule(w_stack, beta_stack)
+    tree = _tree(rng)
+    for r in range(sched.period):
+        off = np.nonzero(degs[r] == 0)[0]
+        if not len(off):
+            continue
+        got_m, got_d = cm_ops.consensus_mix_stacked(
+            tree, self_w[r], nbr_idx[r], nbr_w[r], beta_p[r], T
+        )
+        for key in tree:
+            np.testing.assert_allclose(
+                np.asarray(got_m[key])[off], np.asarray(tree[key])[off], atol=1e-6
+            )
+            np.testing.assert_allclose(np.asarray(got_d[key])[off], 0.0, atol=0.0)
+
+
+def test_consensus_mix_schedule_traced_round_idx(rng):
+    """The jitted wrapper selects the round inside the traced program."""
+    sched = _schedule("link_dropout")
+    w_stack, beta_stack = gl.schedule_matrices(sched, "metropolis")
+    sparse = cm_ops.sparse_from_schedule(w_stack, beta_stack)
+    tree = _tree(rng)
+
+    @jax.jit
+    def step(tree, round_idx):
+        return cm_ops.consensus_mix_schedule(tree, round_idx, *sparse, T)
+
+    for r in [0, 3, sched.period, 2 * sched.period + 1]:
+        got_m, got_d = step(tree, jnp.asarray(r, jnp.int32))
+        want_m, want_d = _dense_reference(
+            w_stack[r % sched.period], beta_stack[r % sched.period], tree
+        )
+        _assert_parity(got_m, want_m)
+        _assert_parity(got_d, want_d)

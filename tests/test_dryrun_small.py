@@ -12,8 +12,9 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json
 import jax
 from repro.launch import dryrun_lib
+from repro.launch.mesh import make_test_mesh
 
-mesh = jax.make_mesh({shape}, {axes}, axis_types=(jax.sharding.AxisType.Auto,) * {n})
+mesh = make_test_mesh({shape}, {axes})
 res = dryrun_lib.run_case(
     "{arch}", "{shape_name}", mesh,
     multi_pod={multi}, mesh_name="test", with_consensus={multi},

@@ -1,8 +1,11 @@
-"""Communication graphs and mixing matrices (incl. hypothesis properties)."""
+"""Communication graphs and mixing matrices.
+
+Hypothesis-based property tests over random graphs live in
+tests/test_property.py (skipped cleanly when hypothesis is absent); this
+module must collect and pass on the bare seed environment.
+"""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.core import graph as gl
 
@@ -82,26 +85,3 @@ def test_spectral_gap_ordering():
         g = gl.build_graph(topo, 16)
         gaps[topo] = gl.spectral_gap(gl.mixing_matrix(g, "metropolis"))
     assert gaps["complete"] > gaps["torus2d"] > gaps["ring"] > gaps["chain"] > 0
-
-
-@settings(max_examples=25, deadline=None)
-@given(
-    k=st.integers(3, 12),
-    seed=st.integers(0, 1000),
-    p=st.floats(0.2, 0.9),
-)
-def test_property_random_graph_mixing(k, seed, p):
-    g = gl.build_graph("erdos_renyi", k, p=p, seed=seed)
-    n = np.random.default_rng(seed).integers(1, 100, size=k)
-    w = gl.mixing_matrix(g, "data_weighted", data_sizes=n)
-    assert np.allclose(w.sum(1), 1.0)
-    assert (w >= -1e-12).all()
-    # consensus contraction: applying W repeatedly converges to rank-1;
-    # iteration budget scales with the spectral gap (hypothesis finds
-    # near-bipartite graphs whose |lambda_2| is close to 1)
-    gap = gl.spectral_gap(w)
-    iters = min(20000, int(30 / max(gap, 1e-3)))
-    x = np.random.default_rng(seed + 1).normal(size=(k, 3))
-    for _ in range(iters):
-        x = w @ x
-    assert np.allclose(x, x[0], atol=1e-3)

@@ -1,0 +1,205 @@
+"""Time-varying GraphSchedule: builders, matrices, and runtime integration."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import graph as gl
+from repro.core import p2p
+
+K = 6
+
+
+def test_static_schedule_wraps_graph():
+    g = gl.build_graph("ring", K)
+    s = gl.static_schedule(g)
+    assert s.period == 1 and s.num_peers == K
+    assert s.graph_at(0) is s.graph_at(17)
+    assert s.union_is_connected()
+
+
+def test_link_dropout_subset_and_determinism():
+    base = gl.build_graph("complete", K)
+    s1 = gl.link_dropout_schedule(base, 0.5, 10, seed=7)
+    s2 = gl.link_dropout_schedule(base, 0.5, 10, seed=7)
+    s3 = gl.link_dropout_schedule(base, 0.5, 10, seed=8)
+    for g1, g2 in zip(s1.graphs, s2.graphs):
+        assert np.array_equal(g1.adjacency, g2.adjacency)
+    assert any(
+        not np.array_equal(g1.adjacency, g3.adjacency)
+        for g1, g3 in zip(s1.graphs, s3.graphs)
+    )
+    for g in s1.graphs:
+        assert not (g.adjacency & ~base.adjacency).any()  # edges only from base
+
+
+def test_link_dropout_survival_rate():
+    base = gl.build_graph("complete", 10)
+    q = 0.7
+    s = gl.link_dropout_schedule(base, q, 400, seed=0)
+    rate = np.mean([g.degree().sum() for g in s.graphs]) / base.degree().sum()
+    assert abs(rate - q) < 0.05
+
+
+def test_random_matching_is_a_matching():
+    for k in (6, 7):  # even and odd peer counts
+        s = gl.random_matching_schedule(k, 20, seed=1)
+        for g in s.graphs:
+            deg = g.degree()
+            assert (deg <= 1).all()
+            assert deg.sum() == 2 * ((k // 2))  # floor(k/2) pairs
+    # odd K: exactly one idle peer per round
+    s = gl.random_matching_schedule(7, 20, seed=1)
+    assert all((g.degree() == 0).sum() == 1 for g in s.graphs)
+
+
+def test_peer_churn_offline_peers_isolated():
+    base = gl.build_graph("complete", K)
+    s = gl.peer_churn_schedule(base, 0.5, 30, seed=0)
+    degs = np.stack([g.degree() for g in s.graphs])
+    assert (degs == 0).any(), "some peer must churn out at this online_prob"
+    for g in s.graphs:
+        assert not (g.adjacency & ~base.adjacency).any()
+
+
+def test_round_robin_cycles():
+    graphs = [gl.build_graph("ring", K), gl.build_graph("star", K)]
+    s = gl.round_robin_schedule(graphs)
+    assert s.period == 2
+    assert s.graph_at(0) is graphs[0] and s.graph_at(3) is graphs[1]
+
+
+def test_schedule_rejects_mismatched_peer_counts():
+    with pytest.raises(ValueError):
+        gl.GraphSchedule((gl.build_graph("ring", 4), gl.build_graph("ring", 6)))
+    with pytest.raises(ValueError):
+        gl.GraphSchedule(())
+
+
+def test_schedule_matrices_shapes_and_stochasticity():
+    base = gl.build_graph("ring", K)
+    s = gl.peer_churn_schedule(base, 0.5, 12, seed=2)
+    sizes = np.arange(1, K + 1)
+    w, beta = gl.schedule_matrices(s, "data_weighted", data_sizes=sizes)
+    assert w.shape == (12, K, K) and beta.shape == (12, K, K)
+    for t in range(12):
+        assert np.allclose(w[t].sum(axis=1), 1.0)
+        assert (w[t] >= -1e-12).all()
+        # isolated peers: self-loop row in W, zero row in Beta
+        iso = s.graphs[t].degree() == 0
+        assert np.allclose(w[t][iso], np.eye(K)[iso])
+        assert np.allclose(beta[t][iso], 0.0)
+        # connected peers' beta rows sum to 1 over neighbors
+        assert np.allclose(beta[t][~iso].sum(axis=1), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Runtime integration
+# ---------------------------------------------------------------------------
+
+
+def _quad_loss(params, batch):
+    return jnp.sum(jnp.square(params["w"] - batch))
+
+
+def _init_fn(key):
+    return {"w": jax.random.normal(key, (4,))}
+
+
+def _batches(targets, t, k):
+    return jnp.broadcast_to(jnp.asarray(targets, jnp.float32), (t, k, 4))
+
+
+def test_static_schedule_bit_identical_to_static_path():
+    """make_round_fn (schedule runtime) == run_round with fixed (K, K) mats,
+    bit for bit, on every state leaf over several rounds."""
+    cfg = p2p.P2PConfig(algorithm="p2pl_affinity", num_peers=3, local_steps=4,
+                        consensus_steps=2, lr=0.1, momentum=0.3, eta_d=0.5,
+                        topology="ring", schedule="static")
+    g = gl.build_graph("ring", 3)
+    w_mat = jnp.asarray(gl.mixing_matrix(g, cfg.mixing), jnp.float32)
+    beta_mat = jnp.asarray(gl.affinity_matrix(g), jnp.float32)
+
+    sched_fn = p2p.make_round_fn(_quad_loss, cfg)
+    static_fn = jax.jit(
+        lambda s, b: p2p.run_round(s, _quad_loss, b, cfg, w_mat, beta_mat)
+    )
+    targets = np.random.default_rng(0).normal(size=(3, 4))
+    batches = _batches(targets, 4, 3)
+
+    s_sched = p2p.init_state(jax.random.PRNGKey(0), _init_fn, cfg)
+    s_static = p2p.init_state(jax.random.PRNGKey(0), _init_fn, cfg)
+    for _ in range(5):
+        al_a, s_sched, loss_a = sched_fn(s_sched, batches)
+        al_b, s_static, loss_b = static_fn(s_static, batches)
+        for leaf_a, leaf_b in zip(jax.tree.leaves((al_a, s_sched, loss_a)),
+                                  jax.tree.leaves((al_b, s_static, loss_b))):
+            assert np.array_equal(np.asarray(leaf_a), np.asarray(leaf_b))
+
+
+@pytest.mark.parametrize("schedule,extra", [
+    ("link_dropout", {}),
+    ("random_matching", {}),
+    ("peer_churn", {}),
+    ("round_robin", {"round_robin_topologies": ("ring", "star")}),
+])
+def test_timevarying_round_fn_single_compile(schedule, extra):
+    """Every schedule runs through ONE jitted round fn: the loss is traced
+    only during the initial compile, never re-traced across rounds."""
+    traces = [0]
+
+    def counting_loss(params, batch):
+        traces[0] += 1
+        return _quad_loss(params, batch)
+
+    cfg = p2p.P2PConfig(algorithm="p2pl_affinity", num_peers=4, local_steps=2,
+                        consensus_steps=1, lr=0.1, topology="ring",
+                        schedule=schedule, schedule_rounds=5, **extra)
+    state = p2p.init_state(jax.random.PRNGKey(1), _init_fn, cfg)
+    fn = p2p.make_round_fn(counting_loss, cfg)
+    targets = np.random.default_rng(1).normal(size=(4, 4))
+    for _ in range(12):
+        _, state, losses = fn(state, _batches(targets, 2, 4))
+    assert int(state.round_idx) == 12
+    assert np.isfinite(float(losses.mean()))
+    assert traces[0] <= 2  # value + grad trace of the single compile
+
+
+def test_churned_out_peer_untouched_by_consensus():
+    """A round whose graph isolates peer i must leave peer i's params equal
+    to its after-local params and its d bias zero."""
+    base = gl.build_graph("complete", 3)
+    # round 0 isolates peer 2; round 1 is fully connected
+    a0 = base.adjacency.copy()
+    a0[2, :] = a0[:, 2] = False
+    sched_graphs = (gl.CommGraph(a0), base)
+    cfg = p2p.P2PConfig(algorithm="p2pl_affinity", num_peers=3, local_steps=2,
+                        consensus_steps=1, lr=0.1, eta_d=1.0)
+    w, beta = gl.schedule_matrices(gl.round_robin_schedule(sched_graphs), cfg.mixing)
+    state = p2p.init_state(jax.random.PRNGKey(2), _init_fn, cfg)
+    targets = np.random.default_rng(2).normal(size=(3, 4))
+    after_local, after_cons, _ = p2p.run_round(
+        state, _quad_loss, _batches(targets, 2, 3), cfg,
+        jnp.asarray(w[0], jnp.float32), jnp.asarray(beta[0], jnp.float32),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(after_cons.params["w"][2]), np.asarray(after_local.params["w"][2])
+    )
+    np.testing.assert_array_equal(np.asarray(after_cons.d_bias["w"][2]), 0.0)
+    # the two connected peers did mix
+    assert not np.array_equal(
+        np.asarray(after_cons.params["w"][0]), np.asarray(after_local.params["w"][0])
+    )
+
+
+def test_config_schedule_validation():
+    with pytest.raises(ValueError):
+        p2p.P2PConfig(schedule="nope")
+    with pytest.raises(ValueError):
+        p2p.P2PConfig(schedule="link_dropout", schedule_rounds=0)
+    with pytest.raises(ValueError):
+        p2p.P2PConfig(schedule="round_robin")  # needs topologies
+    with pytest.raises(ValueError):
+        gl.link_dropout_schedule(gl.build_graph("ring", 4), 0.0, 4)
+    with pytest.raises(ValueError):
+        gl.peer_churn_schedule(gl.build_graph("ring", 4), 1.5, 4)

@@ -1,0 +1,64 @@
+"""Regression guards for the paper's headline claim (Figs. 3 & 6).
+
+Small deterministic runs on synthetic non-IID MNIST, K=2, fixed seeds:
+P2PL-with-Affinity damps the consensus sawtooth relative to local DSGD.
+Kept fast (~12 rounds, reduced data) so it rides in tier-1, not `slow`.
+"""
+import dataclasses
+
+import numpy as np
+
+from repro.configs.p2pl_mnist import noniid_k2, timevarying_k2
+from repro.core import p2p
+from repro.launch.train import run_paper_experiment
+
+ROUNDS = 12
+
+
+def _run(exp, data):
+    return run_paper_experiment(exp, rounds=ROUNDS, data=data, seed=0)
+
+
+def test_affinity_damps_oscillation_below_local_dsgd(mnist_small):
+    # Fig. 6 configuration: the 10-class split (5 classes per device), where
+    # the sawtooth is largest and the affinity damping is unambiguous at
+    # reduced scale.  eta_d=0.5: stable for K=2 full averaging
+    # (EXPERIMENTS.md observation O1).
+    def fig6_exp(algo, eta_d):
+        exp = noniid_k2(algo, 10)
+        return dataclasses.replace(
+            exp,
+            peer_classes=((0, 1, 2, 3, 4), (5, 6, 7, 8, 9)),
+            samples_per_class=100,
+            p2p=dataclasses.replace(exp.p2p, eta_d=eta_d),
+        )
+
+    log_plain = _run(fig6_exp("local_dsgd", 0.0), mnist_small)
+    log_aff = _run(fig6_exp("p2pl_affinity", 0.5), mnist_small)
+
+    # device A's accuracy on its unseen classes, both phase boundaries
+    def osc(log):
+        a = np.stack(log.after_local["peer1_seen"])[:, 0]
+        c = np.stack(log.after_consensus["peer1_seen"])[:, 0]
+        return float(p2p.oscillation_amplitude(a, c).mean())
+
+    assert osc(log_aff) < osc(log_plain), (
+        f"affinity oscillation {osc(log_aff):.4f} must be strictly below "
+        f"local DSGD {osc(log_plain):.4f}"
+    )
+    # sanity: local DSGD on disjoint classes genuinely oscillates
+    assert osc(log_plain) > 0.02
+
+
+def test_timevarying_run_completes_and_measures(mnist_small):
+    """A link_dropout schedule runs end-to-end through run_paper_experiment
+    (single jitted round fn) and still produces the paper's instruments."""
+    exp = timevarying_k2("link_dropout", "local_dsgd", 10,
+                         schedule_rounds=8, link_survival_prob=0.6)
+    log = _run(exp, mnist_small)
+    assert len(log.after_consensus["all"]) == ROUNDS
+    assert np.isfinite(log.train_loss).all()
+    assert 0.0 <= log.final_accuracy("all") <= 1.0
+    # dropped-link rounds skip consensus: oscillation can't exceed static's
+    # round count and the series stays well-formed
+    assert log.oscillation("peer1_seen").shape == (ROUNDS,)

@@ -146,9 +146,9 @@ def test_stacked_layer_prefix():
 
 
 def test_sanitize_divisibility():
-    import jax.sharding as js
+    from repro.launch.mesh import make_test_mesh
 
-    mesh = jax.make_mesh((1,), ("model",), axis_types=(js.AxisType.Auto,))
+    mesh = make_test_mesh((1,), ("model",))
     # fake a 16-wide axis via explicit dict; use real mesh of size 1 => all pass
     t = jax.ShapeDtypeStruct((3, 4), jnp.float32)
     out = specs.sanitize_pspecs(P("model", None), t, mesh)
