@@ -1,0 +1,136 @@
+"""The protocol axis: gossip vs push-sum on symmetric and directed graphs.
+
+One row per (protocol/topology, metric):
+- spectral gap of the per-round mixing matrix (row-stochastic W for gossip,
+  column-stochastic A for push-sum) — the consensus rate actually available,
+- consensus error of the DE-BIASED estimates after one period of pure mixing
+  from a common random start (push-sum divides by the carried mass; gossip's
+  estimates are its raw parameters),
+- bias of the consensus point vs the data-weighted average — the number that
+  indicts row-stochastic gossip on directed graphs and exonerates push-sum,
+- wall-clock per mix step (us).
+
+``benchmarks/run.py`` additionally serializes these rows to
+``BENCH_protocols.json`` so the per-protocol perf trajectory accumulates
+across PRs.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import consensus as consensus_lib
+from repro.core import graph as graph_lib
+from repro.core import protocols as protocols_lib
+
+K_GOSSIP = 16  # peers for the pure-mix metrics
+DIM = 64
+
+
+def _setups(rounds: int, seed: int = 0) -> dict[str, tuple[str, graph_lib.GraphSchedule]]:
+    """name -> (protocol, schedule): the scenario grid."""
+    ring = graph_lib.build_graph("ring", K_GOSSIP)
+    d_ring = graph_lib.build_graph("directed_ring", K_GOSSIP)
+    return {
+        "gossip_ring": ("gossip", graph_lib.static_schedule(ring)),
+        "push_sum_ring": ("push_sum", graph_lib.static_schedule(ring)),
+        "push_sum_directed_ring": ("push_sum", graph_lib.static_schedule(d_ring)),
+        "gossip_directed_ring": ("gossip", graph_lib.static_schedule(d_ring)),
+        "push_sum_one_way_matching": (
+            "push_sum",
+            graph_lib.one_way_matching_schedule(K_GOSSIP, rounds, seed=seed),
+        ),
+        "push_sum_directed_dropout": (
+            "push_sum",
+            graph_lib.link_dropout_schedule(d_ring, 0.7, rounds, seed=seed),
+        ),
+    }
+
+
+def _pure_mix_metrics(
+    protocol: str, sched: graph_lib.GraphSchedule, rounds: int, *, seed: int = 0
+) -> tuple[float, float, float, float]:
+    """(mean spectral gap, consensus error, bias vs weighted avg, us/step)."""
+    rng = np.random.default_rng(seed)
+    data_sizes = rng.integers(1, 50, sched.num_peers)
+    proto = protocols_lib.get_protocol(protocol)
+    consts_np = proto.constants(sched, "data_weighted", data_sizes=data_sizes)
+    # rounds is a multiple of the period, so the per-period mean == per-round mean
+    gaps = [graph_lib.spectral_gap(consts_np.w[r]) for r in range(sched.period)]
+
+    x0 = rng.normal(size=(sched.num_peers, DIM))
+    target = (data_sizes[:, None] * x0).sum(0) / data_sizes.sum()
+    x = {"x": jnp.asarray(x0, jnp.float32)}
+    proto_state = proto.init_state(x, data_sizes)
+    stacked = protocols_lib.ProtocolConstants(
+        jnp.asarray(consts_np.w, jnp.float32),
+        jnp.asarray(consts_np.beta, jnp.float32),
+    )
+    t0 = time.time()
+    for t in range(rounds):
+        consts = protocols_lib.round_constants(stacked, t % sched.period)
+        proto_state, x = proto.mix(proto_state, x, consts)
+    jax.block_until_ready((proto_state, x))
+    us = (time.time() - t0) / rounds * 1e6
+    err = float(consensus_lib.consensus_error(x))
+    bias = float(np.abs(np.asarray(x["x"]).mean(0) - target).max())
+    return float(np.mean(gaps)), err, bias, us
+
+
+def protocol_mixing(full=False):
+    """Pure-mix comparison: per-protocol gap, consensus error, bias, wall-clock."""
+    rounds = 256 if full else 64
+    out = []
+    for name, (protocol, sched) in _setups(min(rounds, 16)).items():
+        gap, err, bias, us = _pure_mix_metrics(protocol, sched, rounds)
+        out.append((f"proto_{name}_mean_spectral_gap", us, gap))
+        out.append((f"proto_{name}_consensus_error_{rounds}r", us, err))
+        out.append((f"proto_{name}_bias_vs_weighted_avg", us, bias))
+    return out
+
+
+def protocol_training(full=False):
+    """Wall-clock per training round, gossip vs push-sum, one jitted round fn."""
+    from repro.core import p2p
+
+    rounds = 30 if full else 10
+    k, t_steps = 8, 4
+    targets = np.random.default_rng(0).normal(size=(k, 4))
+    batches = jnp.broadcast_to(jnp.asarray(targets, jnp.float32), (t_steps, k, 4))
+
+    def quad_loss(params, batch):
+        return jnp.sum(jnp.square(params["w"] - batch))
+
+    def init_fn(key):
+        return {"w": jax.random.normal(key, (4,))}
+
+    out = []
+    for name, protocol, topology in (
+        ("gossip_ring", "gossip", "ring"),
+        ("push_sum_directed_ring", "push_sum", "directed_ring"),
+    ):
+        cfg = p2p.P2PConfig(
+            algorithm="p2pl_affinity", num_peers=k, local_steps=t_steps,
+            consensus_steps=1, lr=0.05, eta_d=0.5, topology=topology,
+            protocol=protocol,
+        )
+        state = p2p.init_state(jax.random.PRNGKey(0), init_fn, cfg)
+        fn = p2p.make_round_fn(quad_loss, cfg)
+        _, state, _ = fn(state, batches)  # compile
+        t0 = time.time()
+        for _ in range(rounds):
+            _, state, _ = fn(state, batches)
+        jax.block_until_ready(state.params)
+        us = (time.time() - t0) / rounds * 1e6
+        out.append((f"proto_train_{name}_round", us,
+                    float(consensus_lib.consensus_error(state.params))))
+    return out
+
+
+ALL_PROTOCOLS = {
+    "proto_mixing": protocol_mixing,
+    "proto_train": protocol_training,
+}

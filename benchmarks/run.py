@@ -1,5 +1,8 @@
 """Benchmark orchestrator.  One function per paper figure + kernel micro-
-benches.  Prints ``name,us_per_call,derived`` CSV (see figures.py/kernels.py).
+benches.  Prints ``name,us_per_call,derived`` CSV (see figures.py/kernels.py)
+and serializes the consensus-protocol rows to ``BENCH_protocols.json`` so the
+per-protocol perf trajectory (spectral gap, consensus error, wall-clock per
+round) accumulates across PRs.
 
     PYTHONPATH=src python -m benchmarks.run              # reduced (CI) scale
     PYTHONPATH=src python -m benchmarks.run --full       # paper scale
@@ -8,6 +11,7 @@ benches.  Prints ``name,us_per_call,derived`` CSV (see figures.py/kernels.py).
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
 
@@ -16,26 +20,41 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale rounds/data")
     ap.add_argument("--only", default="", help="comma-separated subset")
+    ap.add_argument("--json-out", default="BENCH_protocols.json",
+                    help="where to write the protocol benchmark rows "
+                         "('' disables)")
     args = ap.parse_args(argv)
 
     from benchmarks.figures import ALL_FIGURES
     from benchmarks.kernels import ALL_KERNELS
+    from benchmarks.protocols import ALL_PROTOCOLS
     from benchmarks.schedules import ALL_SCHEDULES
 
     only = set(args.only.split(",")) if args.only else None
     failures = 0
+    protocol_rows = []
     print("name,us_per_call,derived")
-    for name, fn in {**ALL_KERNELS, **ALL_FIGURES, **ALL_SCHEDULES}.items():
+    for name, fn in {**ALL_KERNELS, **ALL_FIGURES, **ALL_SCHEDULES,
+                     **ALL_PROTOCOLS}.items():
         if only and name not in only:
             continue
         try:
             out = fn(args.full) if name not in ALL_KERNELS else fn()
             for row_name, us, derived in out:
                 print(f"{row_name},{us:.1f},{derived}", flush=True)
+            if name in ALL_PROTOCOLS:
+                protocol_rows += [
+                    {"name": row_name, "us_per_call": round(us, 1), "derived": derived}
+                    for row_name, us, derived in out
+                ]
         except Exception:  # noqa: BLE001
             failures += 1
             print(f"{name},ERROR,0", flush=True)
             traceback.print_exc(limit=5, file=sys.stderr)
+    if protocol_rows and args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump({"rows": protocol_rows}, f, indent=2)
+        print(f"wrote {args.json_out} ({len(protocol_rows)} rows)", file=sys.stderr)
     if failures:
         sys.exit(1)
 

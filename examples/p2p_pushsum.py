@@ -1,0 +1,55 @@
+"""Beyond the paper: non-IID training over a DIRECTED ring with push-sum.
+
+The paper's gossip assumes every link is bidirectional.  Edge deployments
+often get one-way links (asymmetric radio reach, NAT, energy budgets): peer k
+can push to k+1 but never hears back.  Row-stochastic gossip still contracts
+to *a* consensus on such a graph — just not the right one (the limit is the
+left-Perron-weighted average, not the data-weighted average the paper's
+mixing is designed to produce).  The push-sum protocol fixes this with a
+per-peer mass scalar: column-stochastic weights conserve total mass, and the
+de-biased estimate w_k / y_k converges to the data-weighted average on any
+strongly-connected directed schedule.
+
+This example trains the K=8 non-IID workload (2 classes per peer) on a
+directed ring under both protocols and prints the number that separates
+them: the distance of the consensus point from the data-weighted parameter
+average.  Every run uses ONE jitted round function — the protocol constants
+are stacked and indexed by round inside the compiled program.
+
+    PYTHONPATH=src python examples/p2p_pushsum.py [--rounds 30]
+"""
+import argparse
+
+import numpy as np
+
+from repro.configs.p2pl_mnist import directed_k8
+from repro.core import p2p
+from repro.data import synthetic
+from repro.launch.train import run_paper_experiment
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--algorithm", default="p2pl_affinity")
+    ap.add_argument("--schedule", default="static",
+                    choices=["static", "link_dropout", "one_way_matching"])
+    args = ap.parse_args()
+
+    data = synthetic.mnist_like(20000, 5000)
+    for protocol in ("gossip", "push_sum"):
+        exp = directed_k8(args.schedule, protocol, args.algorithm, 10)
+        sched = p2p.build_schedule(exp.p2p)
+        print(f"== {protocol} on directed {args.schedule}: period {sched.period}, "
+              f"union strongly connected: {sched.union_is_strongly_connected()} ==")
+        log = run_paper_experiment(exp, rounds=args.rounds, data=data)
+        acc = np.stack(log.after_consensus["all"])
+        print(f"  final accuracy (all classes) : {log.final_accuracy('all'):.4f}")
+        print(f"  per-peer final accuracy      : {np.round(acc[-1], 3)}")
+        print(f"  final consensus error        : {log.consensus_error[-1]:.4f}")
+        print(f"  mean accuracy oscillation    : {log.mean_oscillation('all'):.4f}")
+        print()
+
+
+if __name__ == "__main__":
+    main()

@@ -48,6 +48,8 @@ def timevarying_k2(
     link_survival_prob: float = 0.7,
     peer_online_prob: float = 0.8,
     schedule_seed: int = 0,
+    protocol: str = "gossip",
+    round_robin_topologies: tuple = ("complete", "disconnected"),
 ) -> PaperExperiment:
     """Beyond-paper: the K=2 non-IID workload over a churning link.
 
@@ -73,6 +75,8 @@ def timevarying_k2(
             link_survival_prob=link_survival_prob,
             peer_online_prob=peer_online_prob,
             schedule_seed=schedule_seed,
+            protocol=protocol,
+            round_robin_topologies=round_robin_topologies,
         ),
         batch_size=10,
         samples_per_class=50,
@@ -90,6 +94,8 @@ def timevarying_k8(
     link_survival_prob: float = 0.7,
     peer_online_prob: float = 0.8,
     schedule_seed: int = 0,
+    protocol: str = "gossip",
+    round_robin_topologies: tuple = ("ring", "star"),
 ) -> PaperExperiment:
     """Beyond-paper: 8 peers, 2 classes each, gossiping over a time-varying
     graph (pairwise random matchings, dropped links, or peer churn on a
@@ -112,6 +118,66 @@ def timevarying_k8(
             link_survival_prob=link_survival_prob,
             peer_online_prob=peer_online_prob,
             schedule_seed=schedule_seed,
+            protocol=protocol,
+            round_robin_topologies=round_robin_topologies,
+        ),
+        batch_size=10,
+        samples_per_class=50,
+        rounds=60,
+        peer_classes=peer_classes,
+    )
+
+
+def directed_k8(
+    schedule: str = "static",
+    protocol: str = "push_sum",
+    algorithm: str = "p2pl_affinity",
+    local_steps: int = 10,
+    *,
+    schedule_rounds: int = 16,
+    link_survival_prob: float = 0.7,
+    schedule_seed: int = 0,
+) -> PaperExperiment:
+    """Beyond-paper: 8 non-IID peers on a DIRECTED ring — each peer only
+    pushes forward (Sparse-Push-style one-way links).
+
+    Row-stochastic gossip has no correct answer here (a directed round is not
+    average-preserving); the default ``push_sum`` protocol carries a per-peer
+    mass scalar whose ratio de-biases the estimates, so consensus still lands
+    on the data-weighted average.  Schedules: ``static`` (the directed ring),
+    ``link_dropout`` (each one-way link drops independently), or
+    ``one_way_matching`` (random sender->receiver pairs each round).
+
+    Shards are deliberately UNEQUAL and non-uniformly placed (the first half
+    of the ring carries a third class: 150-sample peers feeding 100-sample
+    peers): with uniform — or even alternating — sizes on a degree-regular
+    directed ring the data-weighted row matrix is coincidentally unbiased
+    (its stationary vector is exactly proportional to n) and push-sum
+    degenerates to gossip; varying n_k + n_{k-1} around the ring is what
+    makes the mass correction observable.
+    """
+    peer_classes = tuple(
+        ((2 * k) % 10, (2 * k + 1) % 10, (2 * k + 2) % 10) if k < 4
+        else ((2 * k) % 10, (2 * k + 1) % 10)
+        for k in range(8)
+    )
+    return PaperExperiment(
+        name=f"directed_k8_{schedule}_{protocol}_{algorithm}_T{local_steps}",
+        p2p=P2PConfig(
+            algorithm=algorithm,
+            num_peers=8,
+            local_steps=local_steps,
+            consensus_steps=1,
+            lr=0.01,
+            momentum=0.0,
+            eta_d=0.5,
+            topology="directed_ring",
+            mixing="data_weighted",
+            schedule=schedule,
+            schedule_rounds=schedule_rounds,
+            link_survival_prob=link_survival_prob,
+            schedule_seed=schedule_seed,
+            protocol=protocol,
         ),
         batch_size=10,
         samples_per_class=50,

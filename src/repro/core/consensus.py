@@ -15,6 +15,12 @@ Three execution forms of the same mathematical op — out_k = sum_j W[k,j] w_j:
 All operate on arbitrary pytrees and preserve leaf dtypes (mixing is computed
 in float32 and cast back, matching how one would do it on TPU to avoid bf16
 accumulation error across many neighbors).
+
+These are the *primitive* mixing ops consumed by the consensus protocols in
+``repro.core.protocols``: gossip's ``mix`` is exactly ``mix_stacked`` with a
+row-stochastic W, and push-sum reuses the same einsum/gather forms with
+column-stochastic weights re-scaled by the per-peer mass (the fused variant
+lives in ``repro.kernels.consensus_mix.ops.consensus_mix_push_sum_stacked``).
 """
 from __future__ import annotations
 

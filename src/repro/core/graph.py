@@ -9,6 +9,13 @@ row-stochastic (P2PL, Sec. IV-B) — the paper's choice is data-size weighted:
 
 Doubly-stochastic variants (metropolis, uniform) are provided for the
 local-DSGD baselines common in the literature [10], [12].
+
+Beyond the paper, graphs may be *directed* (``CommGraph(a, directed=True)``):
+``adjacency[i, j]`` then means "i sends to j" — a peer can push without
+receiving, the Sparse-Push setting.  Directed rounds need *column*-stochastic
+weights (``column_stochastic_matrix``) consumed by the push-sum consensus
+protocol (see repro/core/protocols.py); row-stochastic gossip on a directed
+graph would silently bias the consensus point.
 """
 from __future__ import annotations
 
@@ -26,23 +33,41 @@ TOPOLOGIES = (
     "erdos_renyi",
     "hypercube",
     "disconnected",  # for "no consensus" baselines (self-loops only)
+    "directed_ring",  # i -> i+1 only: the canonical push-sum topology
 )
+
+
+def _reachable(adjacency: np.ndarray, start: int = 0) -> np.ndarray:
+    k = adjacency.shape[0]
+    seen = np.zeros(k, dtype=bool)
+    stack = [start]
+    seen[start] = True
+    while stack:
+        v = stack.pop()
+        for u in np.nonzero(adjacency[v])[0]:
+            if not seen[u]:
+                seen[u] = True
+                stack.append(int(u))
+    return seen
 
 
 @dataclasses.dataclass(frozen=True)
 class CommGraph:
-    """An undirected communication graph over K peers.
+    """A communication graph over K peers.
 
-    adjacency: (K, K) bool, no self loops.
+    adjacency: (K, K) bool, no self loops.  ``adjacency[i, j]`` = "i sends to
+    j"; undirected graphs (the default) must be symmetric, ``directed=True``
+    admits one-way edges (a peer can push without receiving).
     """
 
     adjacency: np.ndarray
+    directed: bool = False
 
     def __post_init__(self):
         a = np.asarray(self.adjacency, dtype=bool)
         if a.ndim != 2 or a.shape[0] != a.shape[1]:
             raise ValueError(f"adjacency must be square, got {a.shape}")
-        if not np.array_equal(a, a.T):
+        if not self.directed and not np.array_equal(a, a.T):
             raise ValueError("graph must be undirected (symmetric adjacency)")
         if a.diagonal().any():
             raise ValueError("no self loops in adjacency (self weight is alpha_kk)")
@@ -55,24 +80,32 @@ class CommGraph:
     def neighbors(self, k: int) -> np.ndarray:
         return np.nonzero(self.adjacency[k])[0]
 
+    def in_neighbors(self, k: int) -> np.ndarray:
+        """Peers whose parameters peer k receives (== neighbors if undirected)."""
+        return np.nonzero(self.adjacency[:, k])[0]
+
     def degree(self) -> np.ndarray:
         return self.adjacency.sum(axis=1)
 
+    def in_degree(self) -> np.ndarray:
+        return self.adjacency.sum(axis=0)
+
+    def out_degree(self) -> np.ndarray:
+        return self.adjacency.sum(axis=1)
+
     def is_connected(self) -> bool:
-        k = self.num_peers
-        seen = np.zeros(k, dtype=bool)
-        stack = [0]
-        seen[0] = True
-        while stack:
-            v = stack.pop()
-            for u in np.nonzero(self.adjacency[v])[0]:
-                if not seen[u]:
-                    seen[u] = True
-                    stack.append(int(u))
-        return bool(seen.all())
+        """Weak connectivity (edge directions ignored)."""
+        return bool(_reachable(self.adjacency | self.adjacency.T).all())
+
+    def is_strongly_connected(self) -> bool:
+        """Every peer reaches every peer along directed edges (push-sum's
+        requirement for the de-biased estimates to converge)."""
+        return bool(_reachable(self.adjacency).all() and _reachable(self.adjacency.T).all())
 
     def max_degree(self) -> int:
-        return int(self.degree().max()) if self.num_peers else 0
+        """Max *in*-degree — the padded neighbor width of the sparse mixing
+        row (== max degree for undirected graphs)."""
+        return int(self.in_degree().max()) if self.num_peers else 0
 
 
 def build_graph(topology: str, num_peers: int, *, p: float = 0.3, seed: int = 0) -> CommGraph:
@@ -125,6 +158,11 @@ def build_graph(topology: str, num_peers: int, *, p: float = 0.3, seed: int = 0)
                 return g
     elif topology == "disconnected":
         pass  # all-zero adjacency: every peer isolated
+    elif topology == "directed_ring":
+        for i in range(k):
+            a[i, (i + 1) % k] = True
+        np.fill_diagonal(a, False)
+        return CommGraph(a, directed=True)
     else:
         raise ValueError(f"unknown topology {topology!r}; one of {TOPOLOGIES}")
     return CommGraph(a)
@@ -152,6 +190,12 @@ def mixing_matrix(
     uniform_neighbor — alpha_kj = 1 / (deg_k + 1) (row stochastic).
     identity — no mixing (isolated training baseline).
 
+    Neighbors are *in*-neighbors (the peers whose parameters k receives) —
+    identical to the undirected notion on symmetric graphs.  Note that a
+    row-stochastic W on a genuinely directed graph converges to a *biased*
+    consensus point; directed runs should use ``column_stochastic_matrix``
+    with the push-sum protocol instead.
+
     consensus_step_size: the paper's per-device epsilon_k^(t); W_eps =
     (1 - eps_k) I + eps_k W applied row-wise. eps=1 reproduces W.
     """
@@ -167,22 +211,22 @@ def mixing_matrix(
             raise ValueError("data_sizes must be positive, one per peer")
         w = np.zeros((k, k))
         for i in range(k):
-            nbrs = np.nonzero(adj[i])[0]
+            nbrs = np.nonzero(adj[:, i])[0]
             denom = n[i] + n[nbrs].sum()
             w[i, nbrs] = n[nbrs] / denom
             w[i, i] = 1.0 - w[i, nbrs].sum()
     elif mixing == "metropolis":
-        deg = graph.degree()
+        deg = graph.in_degree()
         w = np.zeros((k, k))
         for i in range(k):
-            for j in np.nonzero(adj[i])[0]:
+            for j in np.nonzero(adj[:, i])[0]:
                 w[i, j] = 1.0 / (1.0 + max(deg[i], deg[j]))
             w[i, i] = 1.0 - w[i].sum()
     elif mixing == "uniform_neighbor":
-        deg = graph.degree()
+        deg = graph.in_degree()
         w = np.zeros((k, k))
         for i in range(k):
-            nbrs = np.nonzero(adj[i])[0]
+            nbrs = np.nonzero(adj[:, i])[0]
             w[i, nbrs] = 1.0 / (deg[i] + 1.0)
             w[i, i] = 1.0 - w[i, nbrs].sum()
     else:
@@ -200,13 +244,87 @@ def mixing_matrix(
     return w
 
 
+def column_stochastic_matrix(
+    graph: CommGraph,
+    mixing: str = "data_weighted",
+    *,
+    data_sizes: Sequence[int] | None = None,
+    consensus_step_size: float | np.ndarray = 1.0,
+) -> np.ndarray:
+    """Column-stochastic push weights A with A[k, j] = mass j pushes to k.
+
+    Column j splits sender j's mass over its *out*-neighbors and itself
+    (sum_k A[k, j] = 1), so the total mass sum_k y_k is conserved every round
+    — the push-sum invariant — on any directed, even disconnected, graph:
+
+    data_weighted — out-neighbor k gets mass proportional to its data size:
+        A[k, j] = n_k / (n_j + sum_{i in out(j)} n_i), A[j, j] = remainder.
+    metropolis   — A[k, j] = 1 / (1 + max(outdeg_j, outdeg_k)) per edge j->k.
+    uniform_neighbor — the classic push-sum split: A[k, j] = 1/(outdeg_j + 1).
+    identity     — no mixing.
+
+    On an undirected graph with ``metropolis`` weighting A is symmetric
+    doubly-stochastic, i.e. identical to ``mixing_matrix`` — push-sum then
+    degenerates to plain gossip with unit mass.
+
+    consensus_step_size: per-device epsilon applied column-wise,
+    A_eps = (1 - eps_j) I + eps_j A — still column-stochastic.
+    """
+    k = graph.num_peers
+    adj = graph.adjacency
+    if mixing == "identity":
+        a = np.eye(k)
+    elif mixing == "data_weighted":
+        if data_sizes is None:
+            data_sizes = np.ones(k)
+        n = np.asarray(data_sizes, dtype=np.float64)
+        if n.shape != (k,) or (n <= 0).any():
+            raise ValueError("data_sizes must be positive, one per peer")
+        a = np.zeros((k, k))
+        for j in range(k):
+            out = np.nonzero(adj[j])[0]
+            denom = n[j] + n[out].sum()
+            a[out, j] = n[out] / denom
+            a[j, j] = 1.0 - a[out, j].sum()
+    elif mixing == "metropolis":
+        deg = graph.out_degree()
+        a = np.zeros((k, k))
+        for j in range(k):
+            for i in np.nonzero(adj[j])[0]:
+                a[i, j] = 1.0 / (1.0 + max(deg[j], deg[i]))
+            a[j, j] = 1.0 - a[:, j].sum()
+    elif mixing == "uniform_neighbor":
+        deg = graph.out_degree()
+        a = np.zeros((k, k))
+        for j in range(k):
+            out = np.nonzero(adj[j])[0]
+            a[out, j] = 1.0 / (deg[j] + 1.0)
+            a[j, j] = 1.0 - a[out, j].sum()
+    else:
+        raise ValueError(f"unknown mixing {mixing!r}; one of {MIXINGS}")
+
+    eps = np.asarray(consensus_step_size, dtype=np.float64)
+    if eps.ndim == 0:
+        eps = np.full(k, float(eps))
+    if eps.shape != (k,):
+        raise ValueError("consensus_step_size must be scalar or (K,)")
+    a = np.eye(k) * (1.0 - eps)[None, :] + eps[None, :] * a
+
+    assert np.all(a >= -1e-12), "push weights must be nonnegative"
+    assert np.allclose(a.sum(axis=0), 1.0), "push matrix must be column stochastic"
+    assert np.all(np.diag(a) > 0), "senders must retain some mass (positive diagonal)"
+    return a
+
+
 def affinity_matrix(graph: CommGraph, *, data_sizes: Sequence[int] | None = None) -> np.ndarray:
     """Beta matrix for the affinity bias d (Sec. V-C):
 
         beta_kj = n_j / sum_{i in N(k)} n_i  for j in N(k), else 0.
 
-    Rows sum to 1 over *neighbors only* (no self weight).  Isolated peers get
-    an all-zero row (d stays 0 — no neighbors to be biased toward).
+    N(k) are k's *in*-neighbors (the peers it hears from; == neighbors on
+    undirected graphs).  Rows sum to 1 over neighbors only (no self weight).
+    Isolated peers get an all-zero row (d stays 0 — no neighbors to be
+    biased toward).
     """
     k = graph.num_peers
     adj = graph.adjacency
@@ -215,7 +333,7 @@ def affinity_matrix(graph: CommGraph, *, data_sizes: Sequence[int] | None = None
     n = np.asarray(data_sizes, dtype=np.float64)
     b = np.zeros((k, k))
     for i in range(k):
-        nbrs = np.nonzero(adj[i])[0]
+        nbrs = np.nonzero(adj[:, i])[0]
         if len(nbrs) == 0:
             continue
         b[i, nbrs] = n[nbrs] / n[nbrs].sum()
@@ -226,7 +344,14 @@ def affinity_matrix(graph: CommGraph, *, data_sizes: Sequence[int] | None = None
 # Time-varying graph schedules
 # ---------------------------------------------------------------------------
 
-SCHEDULES = ("static", "link_dropout", "random_matching", "peer_churn", "round_robin")
+SCHEDULES = (
+    "static",
+    "link_dropout",
+    "random_matching",
+    "peer_churn",
+    "round_robin",
+    "one_way_matching",  # directed: random sender->receiver pairs per round
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -262,11 +387,15 @@ class GraphSchedule:
     def num_peers(self) -> int:
         return self.graphs[0].num_peers
 
+    @property
+    def directed(self) -> bool:
+        return any(g.directed for g in self.graphs)
+
     def graph_at(self, round_idx: int) -> CommGraph:
         return self.graphs[round_idx % self.period]
 
     def max_degree(self) -> int:
-        """Max degree over all rounds — the padding width for sparse kernels."""
+        """Max (in-)degree over all rounds — the padding width for sparse kernels."""
         return max(g.max_degree() for g in self.graphs)
 
     def union_graph(self) -> CommGraph:
@@ -274,10 +403,16 @@ class GraphSchedule:
         adj = np.zeros((self.num_peers, self.num_peers), dtype=bool)
         for g in self.graphs:
             adj |= g.adjacency
-        return CommGraph(adj)
+        return CommGraph(adj, directed=self.directed)
 
     def union_is_connected(self) -> bool:
         return self.union_graph().is_connected()
+
+    def union_is_strongly_connected(self) -> bool:
+        """Strong connectivity of the period union — push-sum's condition for
+        the de-biased estimates to reach consensus (trivially equal to
+        ``union_is_connected`` for undirected schedules)."""
+        return self.union_graph().is_strongly_connected()
 
 
 def static_schedule(graph: CommGraph) -> GraphSchedule:
@@ -288,16 +423,29 @@ def static_schedule(graph: CommGraph) -> GraphSchedule:
 def link_dropout_schedule(
     base: CommGraph, survival_prob: float, rounds: int, *, seed: int = 0
 ) -> GraphSchedule:
-    """Each base edge independently survives each round with prob ``survival_prob``."""
+    """Each base edge independently survives each round with prob ``survival_prob``.
+
+    On a directed base every directed edge is dropped *independently* — a
+    round may keep i->j while losing j->i, exactly the asymmetric-link
+    failures push-sum is built for.  Undirected bases drop whole links.
+    """
     if not 0.0 < survival_prob <= 1.0:
         raise ValueError("survival_prob must be in (0, 1]")
     if rounds < 1:
         raise ValueError("need at least one round")
     rng = np.random.default_rng(seed)
     k = base.num_peers
+    graphs = []
+    if base.directed:
+        ei, ej = np.nonzero(base.adjacency)
+        for _ in range(rounds):
+            keep = rng.random(len(ei)) < survival_prob
+            a = np.zeros((k, k), dtype=bool)
+            a[ei[keep], ej[keep]] = True
+            graphs.append(CommGraph(a, directed=True))
+        return GraphSchedule(tuple(graphs), name="link_dropout")
     iu, ju = np.triu_indices(k, 1)
     edge_mask = base.adjacency[iu, ju]
-    graphs = []
     for _ in range(rounds):
         keep = edge_mask & (rng.random(len(iu)) < survival_prob)
         a = np.zeros((k, k), dtype=bool)
@@ -352,6 +500,30 @@ def peer_churn_schedule(
     return GraphSchedule(tuple(graphs), name="peer_churn")
 
 
+def one_way_matching_schedule(num_peers: int, rounds: int, *, seed: int = 0) -> GraphSchedule:
+    """Directed pairwise gossip: a random one-way matching per round.
+
+    Each round pairs peers at random and each pair transmits in ONE direction
+    (sender -> receiver) — the Sparse-Push communication pattern where a push
+    costs the sender nothing in return traffic.  Row-stochastic gossip cannot
+    average under this schedule (receivers double-count, senders are never
+    heard); the push-sum protocol's mass correction makes it exact.
+    """
+    if num_peers < 2:
+        raise ValueError("matching needs at least two peers")
+    if rounds < 1:
+        raise ValueError("need at least one round")
+    rng = np.random.default_rng(seed)
+    graphs = []
+    for _ in range(rounds):
+        perm = rng.permutation(num_peers)
+        a = np.zeros((num_peers, num_peers), dtype=bool)
+        for p in range(0, num_peers - 1, 2):
+            a[perm[p], perm[p + 1]] = True  # perm[p] sends, perm[p+1] receives
+        graphs.append(CommGraph(a, directed=True))
+    return GraphSchedule(tuple(graphs), name="one_way_matching")
+
+
 def round_robin_schedule(graphs: Sequence[CommGraph]) -> GraphSchedule:
     """Cycle deterministically over a fixed list of graphs."""
     return GraphSchedule(tuple(graphs), name="round_robin")
@@ -363,16 +535,26 @@ def schedule_matrices(
     *,
     data_sizes: Sequence[int] | None = None,
     consensus_step_size: float | np.ndarray = 1.0,
+    stochasticity: str = "row",
 ) -> tuple[np.ndarray, np.ndarray]:
     """Stacked per-round mixing/affinity matrices: (R, K, K) W and Beta.
 
     Row ``r`` is the mixing matrix of ``schedule.graphs[r]`` under the same
     weighting rule; the jitted runtime indexes this stack with
     ``round_idx % R`` so every round reuses one compiled program.
+
+    stochasticity: "row" (gossip, ``mixing_matrix``) or "column" (push-sum,
+    ``column_stochastic_matrix``).
     """
+    if stochasticity == "row":
+        build = mixing_matrix
+    elif stochasticity == "column":
+        build = column_stochastic_matrix
+    else:
+        raise ValueError(f"unknown stochasticity {stochasticity!r}; 'row' or 'column'")
     w = np.stack(
         [
-            mixing_matrix(
+            build(
                 g, mixing, data_sizes=data_sizes, consensus_step_size=consensus_step_size
             )
             for g in schedule.graphs

@@ -21,10 +21,20 @@ This module is the *stacked* runtime: every state leaf carries a leading K
 sharded over the peer axis and XLA lowers the mixing einsum into collectives
 (see repro/launch/train.py for the production path and
 repro/kernels/consensus_mix for the fused TPU kernel).
+
+The consensus step itself is pluggable (``P2PConfig.protocol``, see
+repro/core/protocols.py): ``gossip`` is the paper's row-stochastic mix and
+keeps ``P2PState.protocol == ()`` (stateless, bit-identical to the
+pre-protocol runtime); ``push_sum`` carries a per-peer scalar mass in
+``P2PState.protocol`` (a ``PushSumState``) and runs column-stochastic
+push-sum so *directed* and churning ``GraphSchedule``s average correctly.
+Either way every round indexes the protocol's stacked (R, K, K) constants
+with ``round_idx % R`` inside one jitted program.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable, NamedTuple
 
 import jax
@@ -33,6 +43,7 @@ import numpy as np
 
 from repro.core import consensus as consensus_lib
 from repro.core import graph as graph_lib
+from repro.core import protocols as protocols_lib
 
 PyTree = Any
 LossFn = Callable[[PyTree, Any], jax.Array]  # (per-peer params, per-peer batch) -> scalar
@@ -58,13 +69,14 @@ class P2PConfig:
     max_norm_init: bool = False
     erdos_renyi_p: float = 0.3
     graph_seed: int = 0
+    protocol: str = "gossip"  # one of protocols_lib.protocol_names()
     # -- time-varying communication (GraphSchedule) -------------------------
     schedule: str = "static"  # one of graph_lib.SCHEDULES
     schedule_rounds: int = 16  # period R of a stochastic schedule (cycled)
     link_survival_prob: float = 0.8  # q for schedule="link_dropout"
     peer_online_prob: float = 0.8  # for schedule="peer_churn"
     schedule_seed: int = 0
-    round_robin_topologies: tuple = ()  # named topologies for "round_robin"
+    round_robin_topologies: tuple[str, ...] = ()  # named topologies for "round_robin"
 
     def __post_init__(self):
         if self.algorithm not in ALGORITHMS:
@@ -75,6 +87,11 @@ class P2PConfig:
             raise ValueError("isolated fixes S = 0")
         if self.local_steps < 1:
             raise ValueError("need at least one local step per round")
+        if self.protocol not in protocols_lib.protocol_names():
+            raise ValueError(
+                f"unknown protocol {self.protocol!r}; one of "
+                f"{protocols_lib.protocol_names()}"
+            )
         if self.schedule not in graph_lib.SCHEDULES:
             raise ValueError(
                 f"unknown schedule {self.schedule!r}; one of {graph_lib.SCHEDULES}"
@@ -83,6 +100,19 @@ class P2PConfig:
             raise ValueError("schedule_rounds must be >= 1")
         if self.schedule == "round_robin" and not self.round_robin_topologies:
             raise ValueError("round_robin schedule needs round_robin_topologies")
+        object.__setattr__(
+            self, "round_robin_topologies", tuple(self.round_robin_topologies)
+        )
+        for topo in self.round_robin_topologies:
+            if not isinstance(topo, str):
+                raise ValueError(
+                    f"round_robin_topologies must be topology names, got {topo!r}"
+                )
+            if topo not in graph_lib.TOPOLOGIES:
+                raise ValueError(
+                    f"unknown round_robin topology {topo!r}; one of "
+                    f"{graph_lib.TOPOLOGIES}"
+                )
 
     @property
     def use_affinity_d(self) -> bool:
@@ -98,13 +128,20 @@ class P2PConfig:
 
 
 class P2PState(NamedTuple):
-    """Stacked peer state; every leaf has leading axis K."""
+    """Stacked peer state; every leaf has leading axis K.
+
+    ``protocol`` holds the consensus protocol's own state: ``()`` for gossip
+    (stateless), ``protocols.PushSumState(mass=(K,))`` for push_sum — the
+    per-peer scalar mass whose ratio de-biases the parameters.  It rides
+    through the jitted round like any other leaf.
+    """
 
     params: PyTree
     momentum: PyTree
     d_bias: PyTree  # affinity learning-phase bias (Eq. 3)
     b_bias: PyTree  # affinity consensus-phase bias (Eq. 4)
     round_idx: jax.Array  # scalar int32
+    protocol: PyTree = ()  # consensus-protocol state (see protocols.py)
 
 
 def build_schedule(cfg: P2PConfig) -> graph_lib.GraphSchedule:
@@ -123,6 +160,10 @@ def build_schedule(cfg: P2PConfig) -> graph_lib.GraphSchedule:
         return graph_lib.random_matching_schedule(
             cfg.num_peers, cfg.schedule_rounds, seed=cfg.schedule_seed
         )
+    if cfg.schedule == "one_way_matching":
+        return graph_lib.one_way_matching_schedule(
+            cfg.num_peers, cfg.schedule_rounds, seed=cfg.schedule_seed
+        )
     if cfg.schedule == "peer_churn":
         return graph_lib.peer_churn_schedule(
             build(cfg.topology), cfg.peer_online_prob, cfg.schedule_rounds,
@@ -137,11 +178,12 @@ def build_schedule(cfg: P2PConfig) -> graph_lib.GraphSchedule:
 def mixing_constants(
     cfg: P2PConfig, data_sizes: np.ndarray | None = None
 ) -> tuple[np.ndarray, np.ndarray, graph_lib.GraphSchedule]:
-    """Stacked per-round (W, Beta, schedule) for a config.
+    """Stacked per-round row-stochastic (W, Beta, schedule) for a config.
 
-    Returns (R, K, K) numpy stacks — R = 1 for the static schedule — that the
-    jitted round fn closes over and indexes with ``round_idx % R``, so a
-    time-varying run still compiles exactly once.
+    The pre-protocol entry point, equivalent to the gossip protocol's
+    ``constants``: returns (R, K, K) numpy stacks — R = 1 for the static
+    schedule — that the jitted round fn closes over and indexes with
+    ``round_idx % R``, so a time-varying run still compiles exactly once.
     """
     sched = build_schedule(cfg)
     w, beta = graph_lib.schedule_matrices(
@@ -151,19 +193,52 @@ def mixing_constants(
     return w, beta, sched
 
 
-def init_state(rng: jax.Array, init_fn: Callable[[jax.Array], PyTree], cfg: P2PConfig) -> P2PState:
-    """Independent per-peer init (PyTorch-style default), then optional max-norm sync."""
+def protocol_constants(
+    cfg: P2PConfig, data_sizes: np.ndarray | None = None
+) -> tuple[protocols_lib.ProtocolConstants, graph_lib.GraphSchedule]:
+    """Stacked (R, K, K) round constants of the config's consensus protocol."""
+    sched = build_schedule(cfg)
+    proto = protocols_lib.get_protocol(cfg.protocol)
+    if sched.directed and not proto.directed_capable:
+        warnings.warn(
+            f"protocol {cfg.protocol!r} on a directed schedule "
+            f"({sched.name!r}): a row-stochastic consensus point is biased on "
+            "asymmetric graphs — use protocol='push_sum' unless the bias is "
+            "deliberate",
+            stacklevel=2,
+        )
+    consts = proto.constants(
+        sched, cfg.mixing, data_sizes=data_sizes,
+        consensus_step_size=cfg.consensus_step_size,
+    )
+    return consts, sched
+
+
+def init_state(
+    rng: jax.Array,
+    init_fn: Callable[[jax.Array], PyTree],
+    cfg: P2PConfig,
+    data_sizes: np.ndarray | None = None,
+) -> P2PState:
+    """Independent per-peer init (PyTorch-style default), then optional max-norm sync.
+
+    ``data_sizes`` seeds the protocol state — for push_sum, initial mass
+    proportional to n_k makes the de-biased estimates track the
+    *data-weighted* parameter average (uniform mass without it).
+    """
     keys = jax.random.split(rng, cfg.num_peers)
     params = jax.vmap(init_fn)(keys)
     if cfg.use_max_norm_init:
         params = consensus_lib.max_norm_sync(params)
     zeros = jax.tree.map(jnp.zeros_like, params)
+    proto = protocols_lib.get_protocol(cfg.protocol)
     return P2PState(
         params=params,
         momentum=zeros,
         d_bias=jax.tree.map(jnp.zeros_like, params),
         b_bias=jax.tree.map(jnp.zeros_like, params),
         round_idx=jnp.zeros((), jnp.int32),
+        protocol=proto.init_state(params, data_sizes),
     )
 
 
@@ -221,23 +296,31 @@ def local_phase(
 def consensus_phase(
     state: P2PState,
     cfg: P2PConfig,
-    w_mat: jax.Array,
-    beta_mat: jax.Array,
+    consts: protocols_lib.ProtocolConstants,
 ) -> P2PState:
-    """Run S consensus (gossip) steps; updates the affinity bias d en route."""
+    """Run S consensus steps of the config's protocol; updates the affinity
+    bias d en route.
+
+    ``consts`` is ONE round's (K, K) slice of the protocol constants (select
+    it from the stacked schedule with ``protocols.round_constants``).  The
+    affinity biases operate on the *de-biased* parameters for every protocol:
+    gossip parameters are their own estimates, and push_sum's ``mix`` divides
+    the mass back out before returning.
+    """
     if cfg.consensus_steps == 0:
         return state._replace(round_idx=state.round_idx + 1)
 
-    params, d_bias = state.params, state.d_bias
+    proto = protocols_lib.get_protocol(cfg.protocol)
+    params, d_bias, proto_state = state.params, state.d_bias, state.protocol
     # Peers whose beta row is all-zero (isolated this round — e.g. churned
     # out of a time-varying schedule) have no neighbors to be biased toward:
     # their d stays 0 rather than decaying toward the origin.
-    has_nbrs = jnp.sum(beta_mat, axis=1) > 0  # (K,)
+    has_nbrs = jnp.sum(consts.beta, axis=1) > 0  # (K,)
     for _ in range(cfg.consensus_steps):
         if cfg.use_affinity_d:
             # d_k <- (1/T) sum_j beta_kj (w_j - w_k), from the *incoming*
             # neighbor parameters of this consensus step (Sec. IV-A).
-            nbr_avg = consensus_lib.mix_stacked(beta_mat, params)
+            nbr_avg = consensus_lib.mix_stacked(consts.beta, params)
             d_bias = jax.tree.map(
                 lambda avg, w: jnp.where(
                     has_nbrs.reshape((-1,) + (1,) * (w.ndim - 1)),
@@ -247,14 +330,17 @@ def consensus_phase(
                 nbr_avg,
                 params,
             )
-        mixed = consensus_lib.mix_stacked(w_mat, params)
+        proto_state, mixed = proto.mix(proto_state, params, consts)
         if cfg.use_affinity_b:
             mixed = jax.tree.map(
                 lambda m, b: m + cfg.eta_b * b, mixed, state.b_bias
             )
         params = mixed
 
-    return state._replace(params=params, d_bias=d_bias, round_idx=state.round_idx + 1)
+    return state._replace(
+        params=params, d_bias=d_bias, protocol=proto_state,
+        round_idx=state.round_idx + 1,
+    )
 
 
 def run_round(
@@ -262,36 +348,41 @@ def run_round(
     loss_fn: LossFn,
     batches: PyTree,
     cfg: P2PConfig,
-    w_mat: jax.Array,
-    beta_mat: jax.Array,
+    consts: protocols_lib.ProtocolConstants,
 ) -> tuple[P2PState, P2PState, jax.Array]:
     """One full round: local phase then consensus phase.
 
-    Returns (state_after_local, state_after_consensus, local losses (T,)) so
-    callers can evaluate test accuracy at both phase boundaries — the paper's
-    central measurement (Figs. 2-6).
+    ``consts`` is the round's (K, K) ``ProtocolConstants`` slice.  Returns
+    (state_after_local, state_after_consensus, local losses (T,)) so callers
+    can evaluate test accuracy at both phase boundaries — the paper's central
+    measurement (Figs. 2-6).
     """
     after_local, losses = local_phase(state, loss_fn, batches, cfg)
-    after_consensus = consensus_phase(after_local, cfg, w_mat, beta_mat)
+    after_consensus = consensus_phase(after_local, cfg, consts)
     return after_local, after_consensus, losses
 
 
 def make_round_fn(loss_fn: LossFn, cfg: P2PConfig, data_sizes: np.ndarray | None = None):
     """jit-compiled round closure over the (possibly time-varying) schedule.
 
-    The full (R, K, K) W/Beta stacks are closed over as device constants and
-    indexed with ``round_idx % R`` *inside* the jitted program: one compile
-    covers every round of a time-varying run, with no per-round host sync.
+    The protocol's full (R, K, K) constant stacks are closed over as device
+    constants and indexed with ``round_idx % R`` *inside* the jitted program:
+    one compile covers every round of a time-varying run — for any protocol —
+    with no per-round host sync.
     """
-    w_np, beta_np, _ = mixing_constants(cfg, data_sizes)
-    w_sched = jnp.asarray(w_np, jnp.float32)  # (R, K, K)
-    beta_sched = jnp.asarray(beta_np, jnp.float32)
-    period = w_sched.shape[0]
+    consts_np, _ = protocol_constants(cfg, data_sizes)
+    consts = protocols_lib.ProtocolConstants(
+        w=jnp.asarray(consts_np.w, jnp.float32),  # (R, K, K)
+        beta=jnp.asarray(consts_np.beta, jnp.float32),
+    )
+    period = consts.w.shape[0]
 
     @jax.jit
     def round_fn(state: P2PState, batches: PyTree):
         idx = jax.lax.rem(state.round_idx, jnp.int32(period))
-        return run_round(state, loss_fn, batches, cfg, w_sched[idx], beta_sched[idx])
+        return run_round(
+            state, loss_fn, batches, cfg, protocols_lib.round_constants(consts, idx)
+        )
 
     return round_fn
 

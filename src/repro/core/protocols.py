@@ -1,0 +1,219 @@
+"""Composable consensus protocols: how one gossip step moves parameters.
+
+The paper hardwires Eq. 4 as a row-stochastic mix; this module turns that
+choice into one instance of a ``ConsensusProtocol`` so the same runtime
+(``repro.core.p2p``) can also run directed, Sparse-Push-style schedules where
+a peer sends without receiving.  A protocol owns three things:
+
+    init_state(params, data_sizes)  -> per-run protocol state (leading K axis)
+    constants(schedule, mixing, ..) -> stacked (R, K, K) numpy round constants
+    mix(proto_state, params, consts)-> one consensus step on the stacked params
+
+``constants`` runs once on the host at setup; the jitted round function
+closes over the stack and feeds ``mix`` one round's (K, K) slice selected by
+``round_idx % R`` *inside* the traced program, preserving the
+one-compile-per-run property for every protocol.
+
+State layout per protocol (the ``P2PState.protocol`` leaf):
+
+    gossip   — ``()``: stateless.  ``mix`` is the paper's row-stochastic
+               einsum, bit-identical to the pre-protocol runtime.
+    push_sum — ``PushSumState(mass=(K,) f32)``: each peer carries a scalar
+               push-sum mass y_k.  ``mix`` re-biases the (always de-biased)
+               parameters by y, pushes numerators and mass through the
+               column-stochastic weights, and divides back:
+
+                   num_k = sum_j A[k, j] * y_j * w_j
+                   y_k'  = sum_j A[k, j] * y_j
+                   w_k'  = num_k / y_k'
+
+               Column-stochastic A conserves sum_k y_k == K on ANY directed
+               or churning round, and w' converges to the mass-weighted
+               average of the initial parameters wherever the schedule's
+               union graph is strongly connected.  Data weighting enters
+               through the mass init (y_k proportional to n_k), not through A —
+               the push-sum limit depends only on the initial (numerator,
+               mass) totals, never on the weights themselves.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import consensus as consensus_lib
+from repro.core import graph as graph_lib
+
+PyTree = Any
+
+
+class ProtocolConstants(NamedTuple):
+    """Per-round mixing constants a protocol's ``mix`` consumes.
+
+    ``w``/``beta`` are (R, K, K) stacks on the host (numpy) or device, or one
+    round's (K, K) slice when already selected via ``round_constants``.  For
+    gossip ``w`` is row-stochastic; for push_sum it is column-stochastic.
+    """
+
+    w: Any
+    beta: Any
+
+
+def round_constants(consts: ProtocolConstants, idx) -> ProtocolConstants:
+    """Select round ``idx`` of a stacked (R, ...) constants tree (traceable)."""
+    return ProtocolConstants(w=consts.w[idx], beta=consts.beta[idx])
+
+
+class PushSumState(NamedTuple):
+    """Per-peer push-sum mass y_k; sum_k y_k == K is conserved every round."""
+
+    mass: jax.Array  # (K,) f32
+
+
+class ConsensusProtocol:
+    """Interface of one consensus-step rule over stacked (K, ...) parameters."""
+
+    name: str = "base"
+    # Whether the protocol's consensus point is unbiased on directed
+    # (asymmetric-adjacency) schedules; the runtime warns when a
+    # directed-incapable protocol is configured on a directed schedule.
+    directed_capable: bool = False
+
+    def init_state(self, params: PyTree, data_sizes: Sequence[int] | None = None) -> PyTree:
+        """Per-run protocol state (a pytree carried in ``P2PState.protocol``)."""
+        raise NotImplementedError
+
+    def constants(
+        self,
+        schedule: graph_lib.GraphSchedule,
+        mixing: str = "data_weighted",
+        *,
+        data_sizes: Sequence[int] | None = None,
+        consensus_step_size: float | np.ndarray = 1.0,
+    ) -> ProtocolConstants:
+        """Stacked (R, K, K) numpy round constants for a whole schedule."""
+        raise NotImplementedError
+
+    def mix(
+        self, proto_state: PyTree, params: PyTree, consts: ProtocolConstants
+    ) -> tuple[PyTree, PyTree]:
+        """One consensus step; returns (new proto_state, new params)."""
+        raise NotImplementedError
+
+
+class GossipProtocol(ConsensusProtocol):
+    """The paper's protocol: row-stochastic averaging (Eq. 4), stateless."""
+
+    name = "gossip"
+
+    def init_state(self, params: PyTree, data_sizes: Sequence[int] | None = None) -> PyTree:
+        return ()
+
+    def constants(
+        self,
+        schedule: graph_lib.GraphSchedule,
+        mixing: str = "data_weighted",
+        *,
+        data_sizes: Sequence[int] | None = None,
+        consensus_step_size: float | np.ndarray = 1.0,
+    ) -> ProtocolConstants:
+        w, beta = graph_lib.schedule_matrices(
+            schedule, mixing, data_sizes=data_sizes,
+            consensus_step_size=consensus_step_size,
+        )
+        return ProtocolConstants(w=w, beta=beta)
+
+    def mix(
+        self, proto_state: PyTree, params: PyTree, consts: ProtocolConstants
+    ) -> tuple[PyTree, PyTree]:
+        return proto_state, consensus_lib.mix_stacked(consts.w, params)
+
+
+class PushSumProtocol(ConsensusProtocol):
+    """Directed push-sum gossip: column-stochastic weights + mass correction."""
+
+    name = "push_sum"
+    directed_capable = True
+
+    def init_state(
+        self, params: PyTree, data_sizes: Sequence[int] | None = None
+    ) -> PushSumState:
+        k = jax.tree.leaves(params)[0].shape[0]
+        if data_sizes is None:
+            mass = np.ones(k)
+        else:
+            n = np.asarray(data_sizes, dtype=np.float64)
+            if n.shape != (k,) or (n <= 0).any():
+                raise ValueError("data_sizes must be positive, one per peer")
+            # y_k proportional to n_k, normalized to sum K: the de-biased
+            # estimates then converge to the data-weighted parameter average.
+            mass = k * n / n.sum()
+        return PushSumState(mass=jnp.asarray(mass, jnp.float32))
+
+    def constants(
+        self,
+        schedule: graph_lib.GraphSchedule,
+        mixing: str = "data_weighted",
+        *,
+        data_sizes: Sequence[int] | None = None,
+        consensus_step_size: float | np.ndarray = 1.0,
+    ) -> ProtocolConstants:
+        w, beta = graph_lib.schedule_matrices(
+            schedule, mixing, data_sizes=data_sizes,
+            consensus_step_size=consensus_step_size, stochasticity="column",
+        )
+        return ProtocolConstants(w=w, beta=beta)
+
+    def mix(
+        self, proto_state: PushSumState, params: PyTree, consts: ProtocolConstants
+    ) -> tuple[PushSumState, PyTree]:
+        a = consts.w.astype(jnp.float32)
+        y = proto_state.mass.astype(jnp.float32)  # (K,)
+        y_new = jnp.einsum("kj,j->k", a, y, precision=jax.lax.Precision.HIGHEST)
+
+        def leaf(x):
+            xf = x.astype(jnp.float32)
+            biased = xf * y.reshape((-1,) + (1,) * (x.ndim - 1))
+            num = jnp.einsum(
+                "kj,j...->k...", a, biased, precision=jax.lax.Precision.HIGHEST
+            )
+            out = num / y_new.reshape((-1,) + (1,) * (x.ndim - 1))
+            return out.astype(x.dtype)
+
+        return PushSumState(mass=y_new), jax.tree.map(leaf, params)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, ConsensusProtocol] = {}
+
+
+def register_protocol(protocol: ConsensusProtocol) -> ConsensusProtocol:
+    """Add a protocol instance to the registry (name must be unique)."""
+    if not protocol.name or protocol.name == "base":
+        raise ValueError("protocol needs a distinct name")
+    if protocol.name in _REGISTRY:
+        raise ValueError(f"protocol {protocol.name!r} already registered")
+    _REGISTRY[protocol.name] = protocol
+    return protocol
+
+
+def get_protocol(name: str) -> ConsensusProtocol:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown protocol {name!r}; one of {protocol_names()}"
+        ) from None
+
+
+def protocol_names() -> tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+register_protocol(GossipProtocol())
+register_protocol(PushSumProtocol())

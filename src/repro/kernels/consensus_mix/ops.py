@@ -9,6 +9,12 @@ stacked (R, ...) sparse schedule (built by ``sparse_from_schedule``, padded to
 the schedule-wide max degree) inside the traced program, so every round of a
 churning topology reuses one compiled kernel.
 
+``consensus_mix_push_sum_stacked`` / ``..._push_sum_schedule`` — the directed
+push-sum protocol through the SAME kernel: the (K,) push-sum mass rides as one
+appended all-ones lane of the flattened parameters while the sparse weights
+are pre-scaled by the sender's mass, so a single fused pass yields the mixed
+numerators, the new mass, AND the affinity d of the de-biased parameters.
+
 On CPU the kernel runs in interpret mode (the TPU path flips interpret=False).
 """
 from __future__ import annotations
@@ -110,6 +116,52 @@ def consensus_mix_stacked(
     return unflatten_pytree(stacked, mixed), unflatten_pytree(stacked, d)
 
 
+@functools.partial(jax.jit, static_argnames=("local_steps", "interpret"))
+def consensus_mix_push_sum_stacked(
+    stacked: PyTree,  # leaves (K, ...) — the DE-BIASED parameters
+    mass: jax.Array,  # (K,) push-sum mass y
+    self_w: jax.Array,  # (K,) diagonal of the column-stochastic A
+    nbr_idx: jax.Array,  # (K, D) padded in-neighbor indices
+    nbr_w: jax.Array,  # (K, D) off-diagonal A weights
+    beta: jax.Array,  # (K, D)
+    local_steps: int,
+    *,
+    interpret: bool = True,
+) -> tuple[PyTree, PyTree, jax.Array]:
+    """One push-sum step + affinity d for all peers, via the fused kernel.
+
+    The mass scalar is carried as an appended all-ones lane and the weights
+    are scaled by the *sender's* mass, so the kernel's single pass computes
+
+        [num_k | y_k'] = sum_j A[k, j] y_j [x_j | 1],   d from the raw x_j
+
+    and the de-biased parameters are ``num / y'``.  Equivalent to
+    ``protocols.PushSumProtocol.mix`` plus the d update.
+    Returns (mixed_params, d_bias, new_mass).
+    """
+    flat, _ = flatten_pytree(stacked)  # (K, N)
+    k = flat.shape[0]
+    aug = jnp.concatenate(
+        [flat.astype(jnp.float32), jnp.ones((k, 1), jnp.float32)], axis=1
+    )
+    massf = mass.astype(jnp.float32)
+    self_w_y = self_w * massf
+    nbr_w_y = nbr_w * massf[nbr_idx]
+
+    def per_peer(xk, sw, idx, wn, bt):
+        nbrs = aug[idx]  # (D, N+1) gather — stays in HBM, tiles stream to VMEM
+        return consensus_mix_flat(xk, nbrs, sw, wn, bt, local_steps, interpret=interpret)
+
+    mixed, d = jax.vmap(per_peer)(aug, self_w_y, nbr_idx, nbr_w_y, beta)
+    new_mass = mixed[:, -1]
+    debiased = mixed[:, :-1] / new_mass[:, None]
+    return (
+        unflatten_pytree(stacked, debiased),
+        unflatten_pytree(stacked, d[:, :-1]),
+        new_mass,
+    )
+
+
 def sparse_from_matrices(w_mat: np.ndarray, beta_mat: np.ndarray, *, dmax: int | None = None):
     """Static (self_w, nbr_idx, nbr_w, beta_padded) from dense W and Beta.
 
@@ -166,5 +218,26 @@ def consensus_mix_schedule(
     idx = jax.lax.rem(jnp.asarray(round_idx, jnp.int32), jnp.int32(self_w_s.shape[0]))
     return consensus_mix_stacked(
         stacked, self_w_s[idx], nbr_idx_s[idx], nbr_w_s[idx], beta_s[idx],
+        local_steps, interpret=interpret,
+    )
+
+
+def consensus_mix_push_sum_schedule(
+    stacked: PyTree,  # leaves (K, ...)
+    mass: jax.Array,  # (K,)
+    round_idx: jax.Array,  # scalar int
+    self_w_s: jax.Array,  # (R, K)
+    nbr_idx_s: jax.Array,  # (R, K, D)
+    nbr_w_s: jax.Array,  # (R, K, D)
+    beta_s: jax.Array,  # (R, K, D)
+    local_steps: int,
+    *,
+    interpret: bool = True,
+) -> tuple[PyTree, PyTree, jax.Array]:
+    """Schedule-aware push-sum step: round ``round_idx`` of a (possibly
+    directed) time-varying graph, selected inside the traced program."""
+    idx = jax.lax.rem(jnp.asarray(round_idx, jnp.int32), jnp.int32(self_w_s.shape[0]))
+    return consensus_mix_push_sum_stacked(
+        stacked, mass, self_w_s[idx], nbr_idx_s[idx], nbr_w_s[idx], beta_s[idx],
         local_steps, interpret=interpret,
     )

@@ -28,6 +28,7 @@ import numpy as np
 from repro.configs import get_config, reduced
 from repro.configs.p2pl_mnist import (
     PaperExperiment,
+    directed_k8,
     iid_k100,
     noniid_k2,
     timevarying_k2,
@@ -36,6 +37,7 @@ from repro.configs.p2pl_mnist import (
 from repro.core import consensus as consensus_lib
 from repro.core import metrics as metrics_lib
 from repro.core import p2p
+from repro.core import protocols as protocols_lib
 from repro.data import partition, pipeline, synthetic
 from repro.models import build_model, mlp
 
@@ -66,7 +68,9 @@ def run_paper_experiment(
     cfg = exp.p2p
 
     batcher = pipeline.PeerBatcher(parts, exp.batch_size, seed=seed)
-    state = p2p.init_state(jax.random.PRNGKey(seed), mlp.init_2nn, cfg)
+    # data_sizes seed both the mixing weights and the protocol state (for
+    # push_sum: initial mass proportional to n_k -> data-weighted consensus).
+    state = p2p.init_state(jax.random.PRNGKey(seed), mlp.init_2nn, cfg, data_sizes=sizes)
     round_fn = p2p.make_round_fn(mlp.loss_2nn, cfg, data_sizes=sizes)
 
     # stratified eval groups: seen/unseen per the union of peer classes
@@ -185,17 +189,27 @@ def main(argv=None):
     ap.add_argument("--experiment", default="noniid_affinity",
                     choices=["iid_k100", "noniid_local_dsgd", "noniid_affinity",
                              "noniid_dsgd", "p2p_lm",
-                             "timevarying_k2", "timevarying_k8"])
+                             "timevarying_k2", "timevarying_k8", "directed_k8"])
     ap.add_argument("--rounds", type=int, default=None)
     ap.add_argument("--topology", default="complete")
     ap.add_argument("--local-steps", type=int, default=10)
-    ap.add_argument("--schedule", default="link_dropout",
-                    choices=["static", "link_dropout", "random_matching", "peer_churn"],
-                    help="communication-graph schedule for timevarying_* experiments")
+    ap.add_argument("--schedule", default=None,
+                    choices=["static", "link_dropout", "random_matching",
+                             "peer_churn", "round_robin", "one_way_matching"],
+                    help="communication-graph schedule for timevarying_* / "
+                         "directed_* experiments (default: link_dropout for "
+                         "timevarying_*, static for directed_k8)")
     ap.add_argument("--schedule-rounds", type=int, default=16,
                     help="period of the stochastic schedule (cycled)")
     ap.add_argument("--link-survival-prob", type=float, default=0.7)
     ap.add_argument("--peer-online-prob", type=float, default=0.8)
+    ap.add_argument("--round-robin-topologies", default="ring,star",
+                    help="comma-separated topology names cycled by "
+                         "--schedule round_robin")
+    ap.add_argument("--protocol", default=None,
+                    choices=sorted(protocols_lib.protocol_names()),
+                    help="consensus protocol (default: the experiment's own — "
+                         "gossip everywhere except directed_k8's push_sum)")
     ap.add_argument("--algorithm", default="p2pl_affinity",
                     help="algorithm for timevarying_* experiments")
     ap.add_argument("--out", default="")
@@ -210,12 +224,28 @@ def main(argv=None):
     if args.experiment in ("timevarying_k2", "timevarying_k8"):
         builder = timevarying_k2 if args.experiment == "timevarying_k2" else timevarying_k8
         exp = builder(
-            args.schedule,
+            args.schedule or "link_dropout",
             args.algorithm,
             args.local_steps,
             schedule_rounds=args.schedule_rounds,
             link_survival_prob=args.link_survival_prob,
             peer_online_prob=args.peer_online_prob,
+            round_robin_topologies=tuple(
+                t for t in args.round_robin_topologies.split(",") if t
+            ),
+        )
+    elif args.experiment == "directed_k8":
+        schedule = args.schedule or "static"
+        if schedule not in ("static", "link_dropout", "one_way_matching"):
+            ap.error(f"directed_k8 supports --schedule static|link_dropout|"
+                     f"one_way_matching, got {schedule!r}")
+        exp = directed_k8(
+            schedule,
+            args.protocol or "push_sum",
+            args.algorithm,
+            args.local_steps,
+            schedule_rounds=args.schedule_rounds,
+            link_survival_prob=args.link_survival_prob,
         )
     elif args.experiment == "iid_k100":
         exp = iid_k100(args.topology)
@@ -225,6 +255,10 @@ def main(argv=None):
         exp = noniid_k2("dsgd", 1)
     else:
         exp = noniid_k2("p2pl_affinity", args.local_steps)
+    if args.protocol and exp.p2p.protocol != args.protocol:
+        exp = dataclasses.replace(
+            exp, p2p=dataclasses.replace(exp.p2p, protocol=args.protocol)
+        )
     log = run_paper_experiment(exp, rounds=args.rounds, verbose=True)
     print(f"done in {time.time()-t0:.1f}s")
     if args.out:

@@ -12,6 +12,7 @@ import pytest
 
 from repro.core import consensus as consensus_lib
 from repro.core import graph as gl
+from repro.core import protocols
 from repro.kernels.consensus_mix import ops as cm_ops
 
 K = 8
@@ -135,3 +136,52 @@ def test_consensus_mix_schedule_traced_round_idx(rng):
         )
         _assert_parity(got_m, want_m)
         _assert_parity(got_d, want_d)
+
+
+# ---------------------------------------------------------------------------
+# Push-sum: the kernel path carries the appended mass scalar
+# ---------------------------------------------------------------------------
+
+
+def _directed_schedule(name, rounds=5, seed=2):
+    if name == "one_way_matching":
+        return gl.one_way_matching_schedule(K, rounds, seed=seed)
+    if name == "directed_dropout":
+        return gl.link_dropout_schedule(
+            gl.build_graph("directed_ring", K), 0.6, rounds, seed=seed
+        )
+    return gl.static_schedule(gl.build_graph("directed_ring", K))
+
+
+@pytest.mark.parametrize("name", ["directed_ring", "one_way_matching", "directed_dropout"])
+def test_push_sum_kernel_parity_every_round(name, rng):
+    """consensus_mix_push_sum_* == the dense PushSumProtocol.mix + the d bias
+    of the de-biased params, on every round of a directed schedule, while
+    conserving sum_k y_k == K."""
+    sched = _directed_schedule(name)
+    sizes = rng.integers(1, 50, K)
+    proto = protocols.get_protocol("push_sum")
+    consts_np = proto.constants(sched, "data_weighted", data_sizes=sizes)
+    sparse = cm_ops.sparse_from_schedule(consts_np.w, consts_np.beta)
+    tree = _tree(rng)
+    mass = proto.init_state(tree, sizes).mass
+    for r in range(sched.period):
+        consts = protocols.round_constants(
+            protocols.ProtocolConstants(
+                jnp.asarray(consts_np.w, jnp.float32),
+                jnp.asarray(consts_np.beta, jnp.float32),
+            ),
+            r,
+        )
+        want_state, want_m = proto.mix(protocols.PushSumState(mass=mass), tree, consts)
+        _, want_d = _dense_reference(consts_np.w[r], consts_np.beta[r], tree)
+        got_m, got_d, got_mass = cm_ops.consensus_mix_push_sum_schedule(
+            tree, mass, jnp.asarray(r, jnp.int32), *sparse, T
+        )
+        _assert_parity(got_m, want_m)
+        _assert_parity(got_d, want_d)
+        np.testing.assert_allclose(
+            np.asarray(got_mass), np.asarray(want_state.mass), atol=1e-5
+        )
+        np.testing.assert_allclose(float(got_mass.sum()), K, rtol=1e-5)
+        tree, mass = got_m, got_mass

@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.core import graph as gl
-from repro.core import p2p
+from repro.core import p2p, protocols
 
 K = 6
 
@@ -121,8 +121,9 @@ def test_static_schedule_bit_identical_to_static_path():
     beta_mat = jnp.asarray(gl.affinity_matrix(g), jnp.float32)
 
     sched_fn = p2p.make_round_fn(_quad_loss, cfg)
+    consts = protocols.ProtocolConstants(w=w_mat, beta=beta_mat)
     static_fn = jax.jit(
-        lambda s, b: p2p.run_round(s, _quad_loss, b, cfg, w_mat, beta_mat)
+        lambda s, b: p2p.run_round(s, _quad_loss, b, cfg, consts)
     )
     targets = np.random.default_rng(0).normal(size=(3, 4))
     batches = _batches(targets, 4, 3)
@@ -180,7 +181,9 @@ def test_churned_out_peer_untouched_by_consensus():
     targets = np.random.default_rng(2).normal(size=(3, 4))
     after_local, after_cons, _ = p2p.run_round(
         state, _quad_loss, _batches(targets, 2, 3), cfg,
-        jnp.asarray(w[0], jnp.float32), jnp.asarray(beta[0], jnp.float32),
+        protocols.ProtocolConstants(
+            w=jnp.asarray(w[0], jnp.float32), beta=jnp.asarray(beta[0], jnp.float32)
+        ),
     )
     np.testing.assert_array_equal(
         np.asarray(after_cons.params["w"][2]), np.asarray(after_local.params["w"][2])
@@ -203,3 +206,101 @@ def test_config_schedule_validation():
         gl.link_dropout_schedule(gl.build_graph("ring", 4), 0.0, 4)
     with pytest.raises(ValueError):
         gl.peer_churn_schedule(gl.build_graph("ring", 4), 1.5, 4)
+
+
+# ---------------------------------------------------------------------------
+# Directed graphs
+# ---------------------------------------------------------------------------
+
+
+def test_directed_ring_builder():
+    g = gl.build_graph("directed_ring", K)
+    assert g.directed
+    assert not np.array_equal(g.adjacency, g.adjacency.T)  # genuinely one-way
+    np.testing.assert_array_equal(g.out_degree(), 1)
+    np.testing.assert_array_equal(g.in_degree(), 1)
+    assert g.is_strongly_connected() and g.is_connected()
+    # chain of one-way edges: strongly connected breaks when one edge is cut
+    a = g.adjacency.copy()
+    a[0, 1] = False
+    cut = gl.CommGraph(a, directed=True)
+    assert not cut.is_strongly_connected()
+    assert cut.is_connected()  # still weakly connected
+
+
+def test_commgraph_rejects_asymmetric_unless_directed():
+    a = np.zeros((3, 3), dtype=bool)
+    a[0, 1] = True
+    with pytest.raises(ValueError):
+        gl.CommGraph(a)
+    g = gl.CommGraph(a, directed=True)
+    assert g.in_degree().tolist() == [0, 1, 0]
+
+
+def test_one_way_matching_is_directed_matching():
+    for k in (6, 7):
+        s = gl.one_way_matching_schedule(k, 20, seed=1)
+        assert s.directed
+        for g in s.graphs:
+            assert (g.out_degree() <= 1).all() and (g.in_degree() <= 1).all()
+            assert not (g.adjacency & g.adjacency.T).any()  # strictly one-way
+            assert g.adjacency.sum() == k // 2  # floor(k/2) one-way pairs
+    assert gl.one_way_matching_schedule(8, 40, seed=0).union_is_strongly_connected()
+
+
+def test_directed_link_dropout_drops_directions_independently():
+    base = gl.build_graph("complete", K)
+    dbase = gl.CommGraph(base.adjacency, directed=True)
+    s = gl.link_dropout_schedule(dbase, 0.5, 30, seed=0)
+    assert s.directed
+    for g in s.graphs:
+        assert not (g.adjacency & ~dbase.adjacency).any()
+    assert any(
+        not np.array_equal(g.adjacency, g.adjacency.T) for g in s.graphs
+    ), "independent per-direction dropout must produce an asymmetric round"
+
+
+def test_column_stochastic_matrix_properties():
+    rng = np.random.default_rng(0)
+    sizes = rng.integers(1, 50, K)
+    for topo in ("directed_ring", "ring", "star"):
+        g = gl.build_graph(topo, K)
+        for mixing in ("data_weighted", "metropolis", "uniform_neighbor", "identity"):
+            a = gl.column_stochastic_matrix(g, mixing, data_sizes=sizes)
+            np.testing.assert_allclose(a.sum(axis=0), 1.0)
+            assert (a >= -1e-12).all()
+            assert (np.diag(a) > 0).all()  # senders keep some mass
+            # mass only flows along edges (plus the diagonal)
+            off = a - np.diag(np.diag(a))
+            assert not (off[~g.adjacency.T] != 0).any()
+    # eps blending keeps column stochasticity
+    g = gl.build_graph("directed_ring", K)
+    a = gl.column_stochastic_matrix(g, "uniform_neighbor", consensus_step_size=0.5)
+    np.testing.assert_allclose(a.sum(axis=0), 1.0)
+    np.testing.assert_allclose(np.diag(a), 0.5 + 0.5 * 0.5)  # (1-eps) + eps/2
+
+
+def test_schedule_matrices_column_stochastic():
+    s = gl.one_way_matching_schedule(K, 8, seed=2)
+    sizes = np.arange(1, K + 1)
+    a, beta = gl.schedule_matrices(
+        s, "data_weighted", data_sizes=sizes, stochasticity="column"
+    )
+    assert a.shape == (8, K, K) and beta.shape == (8, K, K)
+    for t in range(8):
+        np.testing.assert_allclose(a[t].sum(axis=0), 1.0)
+        # receivers' beta rows sum to 1 over in-neighbors; senders get 0 rows
+        iso = s.graphs[t].in_degree() == 0
+        np.testing.assert_allclose(beta[t][iso], 0.0)
+        np.testing.assert_allclose(beta[t][~iso].sum(axis=1), 1.0)
+    with pytest.raises(ValueError):
+        gl.schedule_matrices(s, "data_weighted", stochasticity="diagonal")
+
+
+def test_metropolis_column_equals_row_on_undirected():
+    """On symmetric graphs metropolis weights are doubly stochastic: the
+    column-stochastic builder reproduces the row-stochastic matrix exactly."""
+    g = gl.build_graph("ring", K)
+    w = gl.mixing_matrix(g, "metropolis")
+    a = gl.column_stochastic_matrix(g, "metropolis")
+    np.testing.assert_allclose(a, w, atol=1e-12)

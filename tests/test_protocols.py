@@ -1,0 +1,319 @@
+"""The consensus-protocol API: registry, gossip bit-identity with the PR 1
+runtime, and the push-sum invariants (mass conservation, de-biased
+convergence to the data-weighted average on directed schedules)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import consensus as cl
+from repro.core import graph as gl
+from repro.core import p2p, protocols
+
+
+def _quad_loss(params, batch):
+    return jnp.sum(jnp.square(params["w"] - batch))
+
+
+def _init_fn(key):
+    return {"w": jax.random.normal(key, (4,))}
+
+
+def _batches(targets, t, k):
+    return jnp.broadcast_to(jnp.asarray(targets, jnp.float32), (t, k, 4))
+
+
+# ---------------------------------------------------------------------------
+# Registry + config plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_registry_contents_and_lookup():
+    names = protocols.protocol_names()
+    assert "gossip" in names and "push_sum" in names
+    assert protocols.get_protocol("gossip").name == "gossip"
+    assert isinstance(protocols.get_protocol("push_sum"), protocols.PushSumProtocol)
+    with pytest.raises(ValueError):
+        protocols.get_protocol("nope")
+
+
+def test_register_rejects_duplicates_and_unnamed():
+    with pytest.raises(ValueError):
+        protocols.register_protocol(protocols.GossipProtocol())  # name taken
+    with pytest.raises(ValueError):
+        protocols.register_protocol(protocols.ConsensusProtocol())  # name "base"
+
+
+def test_config_validates_protocol_and_round_robin_topologies():
+    with pytest.raises(ValueError):
+        p2p.P2PConfig(protocol="nope")
+    with pytest.raises(ValueError):  # typo'd name fails fast, not in build_schedule
+        p2p.P2PConfig(schedule="round_robin", round_robin_topologies=("ring", "sta"))
+    with pytest.raises(ValueError):
+        p2p.P2PConfig(round_robin_topologies=(3, "ring"))
+    # list input is coerced to tuple; valid names pass
+    cfg = p2p.P2PConfig(schedule="round_robin", round_robin_topologies=["ring", "star"])
+    assert cfg.round_robin_topologies == ("ring", "star")
+    assert cfg.protocol == "gossip"
+
+
+def test_protocol_state_in_p2pstate():
+    cfg_g = p2p.P2PConfig(num_peers=3, local_steps=2)
+    sg = p2p.init_state(jax.random.PRNGKey(0), _init_fn, cfg_g)
+    assert sg.protocol == ()
+    cfg_p = p2p.P2PConfig(num_peers=3, local_steps=2, protocol="push_sum")
+    sp = p2p.init_state(jax.random.PRNGKey(0), _init_fn, cfg_p)
+    assert isinstance(sp.protocol, protocols.PushSumState)
+    np.testing.assert_allclose(np.asarray(sp.protocol.mass), 1.0)
+    # data-size-weighted mass init, normalized to sum K
+    sp2 = p2p.init_state(jax.random.PRNGKey(0), _init_fn, cfg_p,
+                         data_sizes=np.array([1, 2, 3]))
+    np.testing.assert_allclose(np.asarray(sp2.protocol.mass),
+                               3 * np.array([1, 2, 3]) / 6, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Gossip protocol == the PR 1 runtime, bit for bit
+# ---------------------------------------------------------------------------
+
+
+def _pr1_round_fn(loss_fn, cfg, data_sizes=None):
+    """The pre-protocol (PR 1) round function, reconstructed verbatim: dense
+    row-stochastic W/Beta stacks hardwired into the consensus loop."""
+    w_np, beta_np, _ = p2p.mixing_constants(cfg, data_sizes)
+    w_sched = jnp.asarray(w_np, jnp.float32)
+    beta_sched = jnp.asarray(beta_np, jnp.float32)
+    period = w_sched.shape[0]
+
+    def consensus_phase(state, w_mat, beta_mat):
+        if cfg.consensus_steps == 0:
+            return state._replace(round_idx=state.round_idx + 1)
+        params, d_bias = state.params, state.d_bias
+        has_nbrs = jnp.sum(beta_mat, axis=1) > 0
+        for _ in range(cfg.consensus_steps):
+            if cfg.use_affinity_d:
+                nbr_avg = cl.mix_stacked(beta_mat, params)
+                d_bias = jax.tree.map(
+                    lambda avg, w: jnp.where(
+                        has_nbrs.reshape((-1,) + (1,) * (w.ndim - 1)),
+                        (avg - w) / cfg.local_steps,
+                        jnp.zeros_like(w),
+                    ),
+                    nbr_avg,
+                    params,
+                )
+            mixed = cl.mix_stacked(w_mat, params)
+            if cfg.use_affinity_b:
+                mixed = jax.tree.map(
+                    lambda m, b: m + cfg.eta_b * b, mixed, state.b_bias
+                )
+            params = mixed
+        return state._replace(params=params, d_bias=d_bias,
+                              round_idx=state.round_idx + 1)
+
+    @jax.jit
+    def round_fn(state, batches):
+        idx = jax.lax.rem(state.round_idx, jnp.int32(period))
+        after_local, losses = p2p.local_phase(state, loss_fn, batches, cfg)
+        after_cons = consensus_phase(after_local, w_sched[idx], beta_sched[idx])
+        return after_local, after_cons, losses
+
+    return round_fn
+
+
+@pytest.mark.parametrize("schedule,extra", [
+    ("static", {}),
+    ("link_dropout", {}),
+    ("random_matching", {}),
+    ("peer_churn", {}),
+    ("round_robin", {"round_robin_topologies": ("ring", "star")}),
+])
+def test_gossip_bit_identical_to_pr1_path(schedule, extra):
+    """The default protocol through make_round_fn reproduces the PR 1 results
+    bit for bit on every existing schedule, every state leaf, every round."""
+    cfg = p2p.P2PConfig(algorithm="p2pl_affinity", num_peers=4, local_steps=3,
+                        consensus_steps=2, lr=0.1, momentum=0.3, eta_d=0.5,
+                        eta_b=0.1, topology="ring", schedule=schedule,
+                        schedule_rounds=5, **extra)
+    sizes = np.array([3, 1, 4, 2])
+    new_fn = p2p.make_round_fn(_quad_loss, cfg, data_sizes=sizes)
+    old_fn = _pr1_round_fn(_quad_loss, cfg, data_sizes=sizes)
+    s_new = p2p.init_state(jax.random.PRNGKey(0), _init_fn, cfg, data_sizes=sizes)
+    s_old = s_new._replace(protocol=())  # PR 1 state had no protocol leaf
+    targets = np.random.default_rng(0).normal(size=(4, 4))
+    batches = _batches(targets, 3, 4)
+    for _ in range(7):
+        al_n, s_new, loss_n = new_fn(s_new, batches)
+        al_o, s_old, loss_o = old_fn(s_old, batches)
+        new_leaves = jax.tree.leaves((al_n._replace(protocol=()), s_new._replace(protocol=()), loss_n))
+        old_leaves = jax.tree.leaves((al_o, s_old, loss_o))
+        for leaf_n, leaf_o in zip(new_leaves, old_leaves):
+            assert np.array_equal(np.asarray(leaf_n), np.asarray(leaf_o))
+
+
+# ---------------------------------------------------------------------------
+# Push-sum invariants
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("schedule,extra", [
+    ("one_way_matching", {}),
+    ("link_dropout", {"topology": "directed_ring"}),
+    ("peer_churn", {"topology": "ring"}),
+])
+def test_push_sum_mass_conservation(schedule, extra):
+    """sum_k y_k == K after every round of any (directed, churning) schedule,
+    and every peer's mass stays strictly positive."""
+    k = 6
+    cfg = p2p.P2PConfig(algorithm="p2pl_affinity", num_peers=k, local_steps=2,
+                        consensus_steps=1, lr=0.05, eta_d=0.5,
+                        protocol="push_sum", schedule=schedule,
+                        schedule_rounds=7, **extra)
+    state = p2p.init_state(jax.random.PRNGKey(1), _init_fn, cfg)
+    fn = p2p.make_round_fn(_quad_loss, cfg)
+    targets = np.random.default_rng(1).normal(size=(k, 4))
+    for _ in range(12):
+        _, state, _ = fn(state, _batches(targets, 2, k))
+        mass = np.asarray(state.protocol.mass)
+        np.testing.assert_allclose(mass.sum(), k, rtol=1e-5)
+        assert (mass > 0).all()
+
+
+def test_push_sum_pure_mix_reaches_data_weighted_average():
+    """Repeated push-sum steps on a directed ring drive every de-biased
+    estimate to sum_j n_j x_j / sum_j n_j (which row-stochastic gossip on the
+    same directed graph provably misses)."""
+    k = 8
+    g = gl.build_graph("directed_ring", k)
+    sched = gl.static_schedule(g)
+    rng = np.random.default_rng(0)
+    sizes = rng.integers(1, 50, k)
+    x0 = rng.normal(size=(k, 5)).astype(np.float32)
+    target = (sizes[:, None] * x0).sum(0) / sizes.sum()
+    params = {"w": jnp.asarray(x0)}
+
+    def run(protocol):
+        proto = protocols.get_protocol(protocol)
+        consts_np = proto.constants(sched, "data_weighted", data_sizes=sizes)
+        consts = protocols.round_constants(
+            protocols.ProtocolConstants(
+                jnp.asarray(consts_np.w, jnp.float32),
+                jnp.asarray(consts_np.beta, jnp.float32),
+            ),
+            0,
+        )
+        st, x = proto.init_state(params, sizes), params
+        for _ in range(400):
+            st, x = proto.mix(st, x, consts)
+        return np.abs(np.asarray(x["w"]) - target[None, :]).max()
+
+    assert run("push_sum") < 1e-3
+    assert run("gossip") > 1e-2  # directed ring biases plain gossip
+
+
+def test_push_sum_training_on_directed_ring_converges():
+    """Regression for the acceptance criterion: push_sum on a directed-ring
+    GraphSchedule drives the consensus error of the de-biased estimates
+    toward the data-weighted average, with exactly ONE jit compile."""
+    k = 8
+    traces = [0]
+
+    def counting_loss(params, batch):
+        traces[0] += 1
+        return _quad_loss(params, batch)
+
+    cfg = p2p.P2PConfig(algorithm="local_dsgd", num_peers=k, local_steps=1,
+                        consensus_steps=1, lr=0.0,  # lr=0: pure consensus
+                        topology="directed_ring", protocol="push_sum")
+    sizes = np.arange(1, k + 1).astype(np.float64)
+    state = p2p.init_state(jax.random.PRNGKey(2), _init_fn, cfg, data_sizes=sizes)
+    target = (sizes[:, None] * np.asarray(state.params["w"])).sum(0) / sizes.sum()
+    fn = p2p.make_round_fn(counting_loss, cfg, data_sizes=sizes)
+    batches = _batches(np.zeros((k, 4)), 1, k)
+    err0 = float(cl.consensus_error(state.params))
+    for _ in range(120):
+        _, state, _ = fn(state, batches)
+    assert float(cl.consensus_error(state.params)) < 1e-3 * err0
+    np.testing.assert_allclose(np.asarray(state.params["w"]),
+                               np.broadcast_to(target, (k, 4)), atol=1e-3)
+    assert traces[0] <= 2  # value + grad trace of the single compile
+
+
+def test_push_sum_with_metropolis_on_undirected_equals_gossip():
+    """On an undirected graph with doubly-stochastic (metropolis) weights the
+    mass stays exactly 1 and push-sum degenerates to plain gossip."""
+    k = 5
+    g = gl.build_graph("ring", k)
+    sched = gl.static_schedule(g)
+    rng = np.random.default_rng(3)
+    params = {"w": jnp.asarray(rng.normal(size=(k, 6)), jnp.float32)}
+    outs = {}
+    for name in ("gossip", "push_sum"):
+        proto = protocols.get_protocol(name)
+        consts_np = proto.constants(sched, "metropolis")
+        consts = protocols.round_constants(
+            protocols.ProtocolConstants(
+                jnp.asarray(consts_np.w, jnp.float32),
+                jnp.asarray(consts_np.beta, jnp.float32),
+            ),
+            0,
+        )
+        st, x = proto.init_state(params), params
+        for _ in range(3):
+            st, x = proto.mix(st, x, consts)
+        outs[name] = np.asarray(x["w"])
+        if name == "push_sum":
+            np.testing.assert_allclose(np.asarray(st.mass), 1.0, rtol=1e-6)
+    np.testing.assert_allclose(outs["push_sum"], outs["gossip"], atol=1e-6)
+
+
+def test_push_sum_isolated_peer_untouched():
+    """A churned-out peer keeps its parameters and all of its mass."""
+    k = 4
+    base = gl.build_graph("directed_ring", k)
+    a = base.adjacency.copy()
+    a[2, :] = a[:, 2] = False  # peer 2 fully offline this round
+    g = gl.CommGraph(a, directed=True)
+    proto = protocols.get_protocol("push_sum")
+    consts_np = proto.constants(gl.static_schedule(g), "uniform_neighbor")
+    consts = protocols.round_constants(
+        protocols.ProtocolConstants(
+            jnp.asarray(consts_np.w, jnp.float32),
+            jnp.asarray(consts_np.beta, jnp.float32),
+        ),
+        0,
+    )
+    rng = np.random.default_rng(4)
+    params = {"w": jnp.asarray(rng.normal(size=(k, 3)), jnp.float32)}
+    st, x = proto.init_state(params), params
+    st, x = proto.mix(st, x, consts)
+    np.testing.assert_allclose(np.asarray(x["w"])[2], np.asarray(params["w"])[2],
+                               rtol=1e-6)
+    np.testing.assert_allclose(float(st.mass[2]), 1.0, rtol=1e-6)
+
+
+def test_one_compile_per_run_all_protocols():
+    """Both protocols keep the one-compile property on time-varying schedules."""
+    for protocol, schedule, topo in (
+        ("gossip", "link_dropout", "ring"),
+        ("push_sum", "one_way_matching", "complete"),
+        ("push_sum", "link_dropout", "directed_ring"),
+    ):
+        traces = [0]
+
+        def counting_loss(params, batch):
+            traces[0] += 1
+            return _quad_loss(params, batch)
+
+        cfg = p2p.P2PConfig(algorithm="p2pl_affinity", num_peers=4,
+                            local_steps=2, consensus_steps=1, lr=0.1,
+                            topology=topo, protocol=protocol,
+                            schedule=schedule, schedule_rounds=5)
+        state = p2p.init_state(jax.random.PRNGKey(5), _init_fn, cfg)
+        fn = p2p.make_round_fn(counting_loss, cfg)
+        targets = np.random.default_rng(5).normal(size=(4, 4))
+        for _ in range(11):
+            _, state, losses = fn(state, _batches(targets, 2, 4))
+        assert int(state.round_idx) == 11
+        assert np.isfinite(float(losses.mean()))
+        assert traces[0] <= 2, (protocol, schedule, traces[0])
