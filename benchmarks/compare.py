@@ -1,0 +1,82 @@
+"""Compare a fresh BENCH_protocols.json against the committed baseline.
+
+CI's bench-smoke job runs ``benchmarks.run`` at CI scale, then gates on this
+script: the ``derived`` metrics (spectral gap, consensus error, bias — all
+seeded and deterministic up to platform ulp noise) must match the committed
+baseline within tolerance.  ``us_per_call`` is machine-dependent and is never
+compared; it is carried in the uploaded artifact for the perf trajectory.
+
+    python -m benchmarks.compare BENCH_protocols.json fresh.json
+    python -m benchmarks.compare baseline.json fresh.json --rtol 0.05 --atol 1e-4
+
+Exit 0 when every shared row agrees and no baseline row is missing; exit 1
+otherwise, listing each offender.  Rows only present in the fresh file (new
+benchmarks landing in this PR) are reported but do not fail the gate — they
+become baseline when the fresh JSON is committed.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+
+
+def load_rows(path: str) -> dict[str, dict]:
+    with open(path) as f:
+        data = json.load(f)
+    return {row["name"]: row for row in data["rows"]}
+
+
+def compare(
+    baseline: dict[str, dict],
+    fresh: dict[str, dict],
+    *,
+    rtol: float,
+    atol: float,
+) -> list[str]:
+    problems = []
+    for name, want in sorted(baseline.items()):
+        if name not in fresh:
+            problems.append(f"MISSING row {name!r} (in baseline, not in fresh run)")
+            continue
+        a, b = float(want["derived"]), float(fresh[name]["derived"])
+        if not math.isclose(b, a, rel_tol=rtol, abs_tol=atol):
+            problems.append(
+                f"DRIFT {name}: derived {b:.6g} vs baseline {a:.6g} "
+                f"(|diff| {abs(b - a):.3g} > rtol={rtol} / atol={atol})"
+            )
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline", help="committed BENCH_protocols.json")
+    ap.add_argument("fresh", help="freshly produced JSON to check")
+    ap.add_argument("--rtol", type=float, default=0.05,
+                    help="relative tolerance on 'derived' (default 5%%: covers "
+                         "cross-platform f32 reduction noise, catches real "
+                         "regressions in gap/error/bias)")
+    ap.add_argument("--atol", type=float, default=1e-4,
+                    help="absolute floor for derived values near zero "
+                         "(push-sum biases are ~1e-7)")
+    args = ap.parse_args(argv)
+
+    baseline = load_rows(args.baseline)
+    fresh = load_rows(args.fresh)
+    problems = compare(baseline, fresh, rtol=args.rtol, atol=args.atol)
+    new_rows = sorted(set(fresh) - set(baseline))
+    for name in new_rows:
+        print(f"NEW row {name} (not in baseline — will gate once committed)")
+    if problems:
+        print(f"{len(problems)} problem(s) vs {args.baseline}:")
+        for p in problems:
+            print(" ", p)
+        return 1
+    print(f"OK: {len(baseline)} baseline rows matched within "
+          f"rtol={args.rtol}, atol={args.atol} ({len(new_rows)} new)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

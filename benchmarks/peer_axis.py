@@ -1,0 +1,99 @@
+"""The runtime axis: vmap vs shard_map execution of the SAME jitted round.
+
+One row per (runtime, protocol) cell: wall-clock per round (us) with the
+final consensus error as the derived check value — the two runtimes are
+bit-identical, so matched derived values double as a cheap parity probe.
+A closing ``peer_axis_speedup_*`` row reports vmap_us / shard_map_us.
+
+The shard_map rows need one device per peer; on a single-device host (the
+default CI bench job) they are skipped with an explanatory row so the CSV
+stays self-describing:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        PYTHONPATH=src python -m benchmarks.run --only peer_axis
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import consensus as consensus_lib
+from repro.core import p2p
+
+K = 8
+DIM = 256  # per-leaf width: big enough that mixing cost is visible
+T_STEPS = 4
+ROUNDS = 20
+
+
+def _quad_loss(params, batch):
+    return jnp.sum(jnp.square(params["w"] - batch))
+
+
+def _init_fn(key):
+    return {"w": jax.random.normal(key, (DIM,))}
+
+
+def _bench_round_fn(fn, state, batches, rounds):
+    _, state, _ = fn(state, batches)  # compile
+    t0 = time.time()
+    for _ in range(rounds):
+        _, state, _ = fn(state, batches)
+    jax.block_until_ready(state.params)
+    us = (time.time() - t0) / rounds * 1e6
+    # consensus error on HOST params: the sharded run's params live across
+    # devices, and an on-device reduction would compile a different program
+    # than the vmap run's — hiding the runtimes' actual bit-equality
+    return us, float(consensus_lib.consensus_error(jax.device_get(state.params)))
+
+
+def peer_axis_round(full=False):
+    """Wall-clock per round, vmap vs shard_map, gossip and push-sum."""
+    rounds = 60 if full else ROUNDS
+    batches = jnp.broadcast_to(
+        jnp.asarray(np.random.default_rng(0).normal(size=(K, DIM)), jnp.float32),
+        (T_STEPS, K, DIM),
+    )
+    out = []
+    for protocol, topology, schedule in (
+        ("gossip", "ring", "link_dropout"),
+        ("push_sum", "directed_ring", "static"),
+    ):
+        cfg = p2p.P2PConfig(
+            algorithm="p2pl_affinity", num_peers=K, local_steps=T_STEPS,
+            consensus_steps=1, lr=0.05, eta_d=0.5, topology=topology,
+            protocol=protocol, schedule=schedule, schedule_rounds=8,
+        )
+        state = p2p.init_state(jax.random.PRNGKey(0), _init_fn, cfg)
+        vmap_us, vmap_err = _bench_round_fn(
+            p2p.make_round_fn(_quad_loss, cfg), state, batches, rounds
+        )
+        out.append((f"peer_axis_vmap_{protocol}_round", vmap_us, vmap_err))
+        if jax.device_count() < K:
+            out.append((
+                f"peer_axis_shard_map_{protocol}_round_SKIPPED_need_{K}_devices",
+                0.0, 0,
+            ))
+            continue
+        from repro.launch import mesh as mesh_lib
+        from repro.sharding import specs as specs_lib
+
+        mesh = mesh_lib.make_peer_mesh(K)
+        shard_us, shard_err = _bench_round_fn(
+            p2p.make_sharded_round_fn(_quad_loss, cfg, mesh),
+            specs_lib.shard_peer_tree(state, mesh), batches, rounds,
+        )
+        out.append((f"peer_axis_shard_map_{protocol}_round", shard_us, shard_err))
+        assert shard_err == vmap_err, (
+            f"runtimes diverged ({protocol}): vmap {vmap_err} shard {shard_err}"
+        )
+        out.append((f"peer_axis_speedup_{protocol}", shard_us, vmap_us / shard_us))
+    return out
+
+
+ALL_PEER_AXIS = {
+    "peer_axis": peer_axis_round,
+}

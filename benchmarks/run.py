@@ -27,6 +27,7 @@ def main(argv=None) -> None:
 
     from benchmarks.figures import ALL_FIGURES
     from benchmarks.kernels import ALL_KERNELS
+    from benchmarks.peer_axis import ALL_PEER_AXIS
     from benchmarks.protocols import ALL_PROTOCOLS
     from benchmarks.schedules import ALL_SCHEDULES
 
@@ -35,7 +36,7 @@ def main(argv=None) -> None:
     protocol_rows = []
     print("name,us_per_call,derived")
     for name, fn in {**ALL_KERNELS, **ALL_FIGURES, **ALL_SCHEDULES,
-                     **ALL_PROTOCOLS}.items():
+                     **ALL_PROTOCOLS, **ALL_PEER_AXIS}.items():
         if only and name not in only:
             continue
         try:
@@ -51,10 +52,14 @@ def main(argv=None) -> None:
             failures += 1
             print(f"{name},ERROR,0", flush=True)
             traceback.print_exc(limit=5, file=sys.stderr)
-    if protocol_rows and args.json_out:
-        with open(args.json_out, "w") as f:
-            json.dump({"rows": protocol_rows}, f, indent=2)
-        print(f"wrote {args.json_out} ({len(protocol_rows)} rows)", file=sys.stderr)
+    if args.json_out:
+        if protocol_rows:
+            with open(args.json_out, "w") as f:
+                json.dump({"rows": protocol_rows}, f, indent=2)
+            print(f"wrote {args.json_out} ({len(protocol_rows)} rows)", file=sys.stderr)
+        else:
+            print(f"NOT writing {args.json_out}: only proto_* benchmarks "
+                  "serialize rows and none were selected", file=sys.stderr)
     if failures:
         sys.exit(1)
 

@@ -186,6 +186,56 @@ def directed_k8(
     )
 
 
+def sharded_k8(
+    schedule: str = "static",
+    protocol: str = "gossip",
+    algorithm: str = "p2pl_affinity",
+    local_steps: int = 10,
+    *,
+    topology: str = "ring",
+    schedule_rounds: int = 16,
+    link_survival_prob: float = 0.7,
+    schedule_seed: int = 0,
+    round_robin_topologies: tuple = ("ring", "star"),
+) -> PaperExperiment:
+    """The sharded peer-axis runtime's demo workload: 8 non-IID peers sized to
+    CI's 8 forced host devices (``--peer-axis pod``).
+
+    Same learning problem as ``timevarying_k8`` (2 classes per peer on a
+    ring), but parameterized over protocol AND schedule so every runtime
+    parity axis — gossip/push_sum x static/link_dropout/round_robin/
+    one_way_matching — has a named entry point:
+
+        XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+            python -m repro.launch.train --experiment sharded_k8 --peer-axis pod
+    """
+    peer_classes = tuple(((2 * k) % 10, (2 * k + 1) % 10) for k in range(8))
+    return PaperExperiment(
+        name=f"sharded_k8_{schedule}_{protocol}_{algorithm}_T{local_steps}",
+        p2p=P2PConfig(
+            algorithm=algorithm,
+            num_peers=8,
+            local_steps=local_steps,
+            consensus_steps=1,
+            lr=0.01,
+            momentum=0.0,
+            eta_d=0.5,
+            topology=topology,
+            mixing="data_weighted",
+            schedule=schedule,
+            schedule_rounds=schedule_rounds,
+            link_survival_prob=link_survival_prob,
+            schedule_seed=schedule_seed,
+            protocol=protocol,
+            round_robin_topologies=round_robin_topologies,
+        ),
+        batch_size=10,
+        samples_per_class=50,
+        rounds=60,
+        peer_classes=peer_classes,
+    )
+
+
 def noniid_k2(algorithm: str = "local_dsgd", local_steps: int = 10) -> PaperExperiment:
     """Fig. 3cd/6: K=2, pathological non-IID (A: {0,1}, B: {7,8})."""
     return PaperExperiment(

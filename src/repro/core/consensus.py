@@ -113,6 +113,32 @@ def mix_sparse(
 # ---------------------------------------------------------------------------
 
 
+def gather_peer_rows(block: PyTree, axis_name: str, lanes, num_peers: int) -> PyTree:
+    """Rebuild the stacked (K, ...) peer array inside a shard_map block.
+
+    ``block`` leaves are this peer's (1, ...) slice of the stacked peer axis;
+    ``lanes`` is a static ``graph.PermLane`` tuple (see ``edge_color_lanes``).
+    One ppermute per lane sends the block along that lane's edges — the
+    schedule-aware sparse communication pattern.  Rows of peers this shard
+    never hears from stay ZERO; consumers multiply them by mixing weights that
+    are zero on exactly those rows, so the zeros never contribute (and the
+    reconstructed einsum stays bit-identical to the dense stacked form).
+    """
+    my = jax.lax.axis_index(axis_name)
+
+    def leaf(v: jax.Array) -> jax.Array:
+        full = jnp.zeros((num_peers,) + v.shape[1:], v.dtype)
+        full = full.at[my].set(v[0])
+        for lane in lanes:
+            recv = jax.lax.ppermute(v, axis_name, perm=list(lane.perm))
+            src = jnp.asarray(lane.src_for_dst, jnp.int32)[my]
+            # sentinel src == num_peers marks "no payload this lane": dropped
+            full = full.at[src].set(recv[0], mode="drop")
+        return full
+
+    return jax.tree.map(leaf, block)
+
+
 def mix_psum(x: PyTree, axis_name: str, *, self_weight: float, peer_weight: float) -> PyTree:
     """Complete-graph gossip with uniform weights as one weighted all-reduce.
 

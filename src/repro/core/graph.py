@@ -529,6 +529,75 @@ def round_robin_schedule(graphs: Sequence[CommGraph]) -> GraphSchedule:
     return GraphSchedule(tuple(graphs), name="round_robin")
 
 
+# ---------------------------------------------------------------------------
+# Permutation-lane extraction (sharded peer-axis runtime)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PermLane:
+    """One ``jax.lax.ppermute``'s worth of edges.
+
+    ``ppermute`` requires distinct sources and distinct destinations, so a
+    round's edge set is partitioned into lanes (a bipartite edge coloring);
+    the sharded runtime issues one ppermute per lane per consensus step.
+
+    perm:         static ((src, dst), ...) pairs fed to ppermute verbatim.
+    src_for_dst:  (K,) — src_for_dst[k] is the peer whose payload k receives
+                  in this lane, or the sentinel K when k receives nothing
+                  (the receiver scatters with ``mode="drop"``).
+    """
+
+    perm: tuple[tuple[int, int], ...]
+    src_for_dst: tuple[int, ...]
+
+
+def edge_color_lanes(adjacency: np.ndarray) -> tuple[PermLane, ...]:
+    """Partition ``adjacency[src, dst]`` edges into ppermute-able lanes.
+
+    Greedy bipartite edge coloring: each lane uses every peer at most once as
+    a source and at most once as a destination.  Deterministic (row-major edge
+    order); lane count is at most in_degree + out_degree - 1 per Vizing-style
+    bounds, and exactly the max degree for the regular graphs we ship
+    (rings: 1-2 lanes, matchings: 1).
+    """
+    adjacency = np.asarray(adjacency, dtype=bool)
+    k = adjacency.shape[0]
+    lanes: list[dict[int, int]] = []  # per lane: dst -> src
+    for src, dst in zip(*np.nonzero(adjacency)):
+        src, dst = int(src), int(dst)
+        for lane in lanes:
+            if dst not in lane and src not in lane.values():
+                lane[dst] = src
+                break
+        else:
+            lanes.append({dst: src})
+    out = []
+    for lane in lanes:
+        src_for_dst = np.full((k,), k, dtype=np.int32)
+        for dst, src in lane.items():
+            src_for_dst[dst] = src
+        out.append(
+            PermLane(
+                perm=tuple(sorted((src, dst) for dst, src in lane.items())),
+                src_for_dst=tuple(int(s) for s in src_for_dst),
+            )
+        )
+    return tuple(out)
+
+
+def schedule_lanes(schedule: GraphSchedule) -> tuple[PermLane, ...]:
+    """Static ppermute lanes covering the UNION of the period's edge sets.
+
+    One lane set serves every round of the schedule, so the jitted sharded
+    round keeps the one-compile property: the lanes (and their perms) are
+    trace-time constants while the round's mixing weights — selected with
+    ``round_idx % R`` inside the program — zero out any lane edge absent from
+    that round's graph.
+    """
+    return edge_color_lanes(schedule.union_graph().adjacency)
+
+
 def schedule_matrices(
     schedule: GraphSchedule,
     mixing: str = "data_weighted",

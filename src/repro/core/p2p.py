@@ -17,10 +17,16 @@ Affinity biases (Sec. IV-A, "one possible choice", which Sec. V-C uses):
     b_k <- (1/S) w_k                         (computed during local phase)
 
 This module is the *stacked* runtime: every state leaf carries a leading K
-(peer) axis.  On CPU the K axis is vmapped; on a mesh the same arrays are
-sharded over the peer axis and XLA lowers the mixing einsum into collectives
-(see repro/launch/train.py for the production path and
-repro/kernels/consensus_mix for the fused TPU kernel).
+(peer) axis.  Two execution modes share the math bit for bit:
+
+  * ``make_round_fn`` — the K axis is vmapped (CPU experiments); the mix is a
+    dense (K, K) einsum.
+  * ``make_sharded_round_fn`` — the K axis is ``shard_map``'d over a real mesh
+    (``peer_axis="pod"``): each mesh slice holds ONE peer's replica, local
+    phases run embarrassingly parallel, and the schedule-aware mix lowers to
+    ``ppermute`` sends along the round's edges (``graph.schedule_lanes``).
+    See repro/launch/train.py (``--peer-axis pod``) for the production path
+    and repro/kernels/consensus_mix for the fused TPU kernel.
 
 The consensus step itself is pluggable (``P2PConfig.protocol``, see
 repro/core/protocols.py): ``gossip`` is the paper's row-stochastic mix and
@@ -248,19 +254,33 @@ def init_state(
 
 
 def local_phase(
-    state: P2PState, loss_fn: LossFn, batches: PyTree, cfg: P2PConfig
+    state: P2PState,
+    loss_fn: LossFn,
+    batches: PyTree,
+    cfg: P2PConfig,
+    *,
+    axis_name: str | None = None,
 ) -> tuple[P2PState, jax.Array]:
     """Run T local steps on every peer.
 
     batches: pytree whose leaves are (T, K, ...) — step-major, then peer.
     Returns (new_state, per-step mean loss (T,)).
+
+    ``axis_name`` is set by the sharded runtime, where K is a mesh axis and
+    the leaves seen here are (1, ...) blocks: the per-step loss mean then
+    all-gathers the K per-peer scalars first, so the reduction runs over the
+    same (K,) vector — and produces the same bits — as the vmap runtime.
     """
-    grad_fn = jax.grad(loss_fn)
+    # one forward serves both the loss value and the gradient: cheaper than
+    # separate vmap(loss)/vmap(grad) passes, and it pins the loss to the same
+    # expression graph in the vmap and shard_map runtimes (a standalone
+    # vmap(loss_fn) fuses differently at batch K than at batch 1, breaking
+    # the runtimes' bit-parity contract on the reported losses)
+    value_and_grad_fn = jax.value_and_grad(loss_fn)
 
     def step(carry, batch_t):
         params, mom = carry
-        grads = jax.vmap(grad_fn)(params, batch_t)
-        losses = jax.vmap(loss_fn)(params, batch_t)
+        losses, grads = jax.vmap(value_and_grad_fn)(params, batch_t)
         if cfg.momentum:
             mom = jax.tree.map(lambda m, g: cfg.momentum * m + g, mom, grads)
             update = mom
@@ -275,9 +295,16 @@ def local_phase(
             )
         else:
             params = jax.tree.map(lambda w, u: w - cfg.lr * u, params, update)
-        return (params, mom), jnp.mean(losses)
+        return (params, mom), losses
 
     (params, mom), losses = jax.lax.scan(step, (state.params, state.momentum), batches)
+    # cross-peer loss mean OUTSIDE the scan, on the materialized (T, K)
+    # buffer: an in-scan mean compiles differently in the (XLA-peeled) first
+    # iteration than in the loop body, so the vmap and shard_map runtimes
+    # would disagree in the last ulp; out here both reduce identical buffers
+    if axis_name is not None:
+        losses = jax.lax.all_gather(losses, axis_name, axis=1, tiled=True)  # (T, K)
+    losses = jnp.mean(losses, axis=1)  # (T,) per-step mean over peers
 
     # b <- (1/S) w (updated during local learning; fixed during consensus).
     b_bias = state.b_bias
@@ -360,6 +387,161 @@ def run_round(
     after_local, losses = local_phase(state, loss_fn, batches, cfg)
     after_consensus = consensus_phase(after_local, cfg, consts)
     return after_local, after_consensus, losses
+
+
+# ---------------------------------------------------------------------------
+# Sharded peer-axis runtime (shard_map over the mesh, peer_axis="pod")
+# ---------------------------------------------------------------------------
+
+
+def _shard_map_fn():
+    """Version-compat shard_map: jax.shard_map (>= 0.6) or the experimental
+    module it graduated from, with replication checking disabled either way
+    (the runtime's replicated outputs — round_idx, losses — are replicated by
+    construction; the check's rewrite rules don't cover every jax version)."""
+    try:
+        from jax import shard_map as sm  # jax >= 0.6
+    except ImportError:
+        from jax.experimental.shard_map import shard_map as sm
+
+    def wrap(f, *, mesh, in_specs, out_specs):
+        for kw in ({"check_rep": False}, {"check_vma": False}, {}):
+            try:
+                return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+            except TypeError:
+                continue
+        raise RuntimeError("no compatible shard_map signature found")
+
+    return wrap
+
+
+def consensus_phase_sharded(
+    state: P2PState,
+    cfg: P2PConfig,
+    consts: protocols_lib.ProtocolConstants,
+    *,
+    axis_name: str,
+    lanes,
+) -> P2PState:
+    """``consensus_phase`` inside a shard_map block: one peer per mesh slice.
+
+    Every ``P2PState`` leaf carries this peer's (1, ...) block of the stacked
+    axis; ``consts`` is the round's full (K, K) slice (replicated — protocol
+    matrices are tiny next to parameters).  Neighbor parameters arrive through
+    one ``ppermute`` per ``PermLane`` (``consensus.gather_peer_rows``); the mix
+    is then this peer's (1, K) row of the same einsum the stacked runtime
+    computes, which keeps the two runtimes bit-identical in fp32.
+    """
+    if cfg.consensus_steps == 0:
+        return state._replace(round_idx=state.round_idx + 1)
+
+    proto = protocols_lib.get_protocol(cfg.protocol)
+    k = consts.w.shape[-1]
+    my = jax.lax.axis_index(axis_name)
+    beta_row = jnp.take(consts.beta, my, axis=0)[None]  # (1, K)
+    params, d_bias, proto_state = state.params, state.d_bias, state.protocol
+    has_nbrs = jnp.sum(beta_row, axis=1) > 0  # (1,)
+    for _ in range(cfg.consensus_steps):
+        # the round's edges, once per step: every consumer below reads rows of
+        # this reconstruction (zero rows never meet nonzero weights)
+        params_full = consensus_lib.gather_peer_rows(params, axis_name, lanes, k)
+        if cfg.use_affinity_d:
+            nbr_avg = consensus_lib.mix_stacked(beta_row, params_full)
+            d_bias = jax.tree.map(
+                lambda avg, w: jnp.where(
+                    has_nbrs.reshape((-1,) + (1,) * (w.ndim - 1)),
+                    (avg - w) / cfg.local_steps,
+                    jnp.zeros_like(w),
+                ),
+                nbr_avg,
+                params,
+            )
+        proto_state, mixed = proto.mix_sharded(
+            proto_state, params, params_full, consts.w, axis_name=axis_name, lanes=lanes
+        )
+        if cfg.use_affinity_b:
+            mixed = jax.tree.map(
+                lambda m, b: m + cfg.eta_b * b, mixed, state.b_bias
+            )
+        params = mixed
+
+    return state._replace(
+        params=params, d_bias=d_bias, protocol=proto_state,
+        round_idx=state.round_idx + 1,
+    )
+
+
+def make_sharded_round_fn(
+    loss_fn: LossFn,
+    cfg: P2PConfig,
+    mesh,
+    data_sizes: np.ndarray | None = None,
+    *,
+    axis_name: str = "pod",
+):
+    """jit-compiled round over a REAL mesh: one peer replica per mesh slice.
+
+    The drop-in production form of ``make_round_fn``: same signature for the
+    returned callable, same (state, batches) -> (after_local, after_consensus,
+    losses) contract, bit-identical fp32 results — but the peer axis is
+    ``shard_map``'d over ``mesh``'s ``axis_name`` instead of vmapped, local
+    phases run embarrassingly parallel, and the consensus mix lowers to one
+    ppermute per schedule lane (``graph.schedule_lanes``) instead of a dense
+    (K, K) einsum.  The protocol's (R, K, K) constants stay replicated and are
+    sliced with ``round_idx % R`` inside the one jitted program.
+
+    State/batch placement: any input works (jit reshards), but steady-state
+    runs should place the state with ``sharding.specs.shard_peer_tree`` to
+    avoid a per-round host transfer.
+    """
+    from repro.sharding import specs as specs_lib
+
+    axis_sizes = dict(mesh.shape)
+    if axis_sizes.get(axis_name) != cfg.num_peers:
+        raise ValueError(
+            f"mesh axis {axis_name!r} must have exactly num_peers="
+            f"{cfg.num_peers} slices, got mesh shape {axis_sizes} "
+            "(see repro.launch.mesh.make_peer_mesh)"
+        )
+    consts_np, sched = protocol_constants(cfg, data_sizes)
+    w_dev = jnp.asarray(consts_np.w, jnp.float32)  # (R, K, K)
+    beta_dev = jnp.asarray(consts_np.beta, jnp.float32)
+    period = w_dev.shape[0]
+    lanes = graph_lib.schedule_lanes(sched)
+    shard_map = _shard_map_fn()
+
+    def block(state: P2PState, batches: PyTree, w_stack, beta_stack):
+        # the per-step loss means all-gather inside the block (axis_name), so
+        # the (T,) output is replicated — and reduced over the same (K,)
+        # vector as the vmap runtime
+        after_local, losses = local_phase(
+            state, loss_fn, batches, cfg, axis_name=axis_name
+        )
+        idx = jax.lax.rem(state.round_idx, jnp.int32(period))
+        consts = protocols_lib.round_constants(
+            protocols_lib.ProtocolConstants(w=w_stack, beta=beta_stack), idx
+        )
+        after_cons = consensus_phase_sharded(
+            after_local, cfg, consts, axis_name=axis_name, lanes=lanes
+        )
+        return after_local, after_cons, losses
+
+    from jax.sharding import PartitionSpec as P
+
+    @jax.jit
+    def round_fn(state: P2PState, batches: PyTree):
+        s_specs = specs_lib.peer_stacked_pspecs(state, peer_axis=axis_name)
+        b_specs = specs_lib.peer_batch_pspecs(batches, peer_axis=axis_name)
+        c_spec = P(None, None, None)
+        mapped = shard_map(
+            block,
+            mesh=mesh,
+            in_specs=(s_specs, b_specs, c_spec, c_spec),
+            out_specs=(s_specs, s_specs, P(None)),
+        )
+        return mapped(state, batches, w_dev, beta_dev)
+
+    return round_fn
 
 
 def make_round_fn(loss_fn: LossFn, cfg: P2PConfig, data_sizes: np.ndarray | None = None):

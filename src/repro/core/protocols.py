@@ -102,6 +102,28 @@ class ConsensusProtocol:
         """One consensus step; returns (new proto_state, new params)."""
         raise NotImplementedError
 
+    def mix_sharded(
+        self,
+        proto_state: PyTree,
+        params: PyTree,
+        params_full: PyTree,
+        w_mat: jax.Array,
+        *,
+        axis_name: str,
+        lanes,
+    ) -> tuple[PyTree, PyTree]:
+        """``mix`` inside a shard_map block of the sharded peer-axis runtime.
+
+        ``params``/``proto_state`` leaves carry this peer's (1, ...) block of
+        the stacked axis; ``params_full`` is the (K, ...) reconstruction from
+        ``consensus.gather_peer_rows`` (zero rows for non-in-neighbors) and
+        ``w_mat`` the round's full (K, K) protocol matrix (replicated — it is
+        tiny next to the parameters).  Must compute exactly the arithmetic of
+        ``mix`` restricted to this peer's row — the runtime's parity contract
+        is fp32 bit-identity with the vmap path.
+        """
+        raise NotImplementedError
+
 
 class GossipProtocol(ConsensusProtocol):
     """The paper's protocol: row-stochastic averaging (Eq. 4), stateless."""
@@ -129,6 +151,21 @@ class GossipProtocol(ConsensusProtocol):
         self, proto_state: PyTree, params: PyTree, consts: ProtocolConstants
     ) -> tuple[PyTree, PyTree]:
         return proto_state, consensus_lib.mix_stacked(consts.w, params)
+
+    def mix_sharded(
+        self,
+        proto_state: PyTree,
+        params: PyTree,
+        params_full: PyTree,
+        w_mat: jax.Array,
+        *,
+        axis_name: str,
+        lanes,
+    ) -> tuple[PyTree, PyTree]:
+        # this peer's (1, K) x (K, ...) row of the stacked path's einsum
+        my = jax.lax.axis_index(axis_name)
+        w_row = jnp.take(w_mat, my, axis=0)[None]
+        return proto_state, consensus_lib.mix_stacked(w_row, params_full)
 
 
 class PushSumProtocol(ConsensusProtocol):
@@ -183,6 +220,50 @@ class PushSumProtocol(ConsensusProtocol):
             return out.astype(x.dtype)
 
         return PushSumState(mass=y_new), jax.tree.map(leaf, params)
+
+    def mix_sharded(
+        self,
+        proto_state: PushSumState,
+        params: PyTree,
+        params_full: PyTree,
+        w_mat: jax.Array,
+        *,
+        axis_name: str,
+        lanes,
+    ) -> tuple[PushSumState, PyTree]:
+        """Row-restricted ``mix``: the (K,) mass rides the same ppermute lanes
+        as the parameters, and the de-bias division happens on this row only.
+
+        Mirrors ``mix`` operation for operation (f32 bias multiply, HIGHEST-
+        precision einsums, divide, cast back) so the sharded runtime stays
+        bit-identical to the stacked one.  The scalar mass update runs the
+        FULL (K, K) x (K,) matvec and keeps one row: a (1, K) x (K,) dot is
+        too narrow for XLA to reduce in the same order as the stacked matvec,
+        while the full product — on zero-padded masses whose foreign rows are
+        discarded — shares its primitive shape and therefore its bits.
+        """
+        k = w_mat.shape[-1]
+        my = jax.lax.axis_index(axis_name)
+        a = w_mat.astype(jnp.float32)  # (K, K)
+        a_row = jnp.take(a, my, axis=0)[None]  # (1, K)
+        y = proto_state.mass.astype(jnp.float32)  # (1,)
+        y_full = consensus_lib.gather_peer_rows(y, axis_name, lanes, k)  # (K,)
+        y_new_all = jnp.einsum("kj,j->k", a, y_full, precision=jax.lax.Precision.HIGHEST)
+        y_new = jnp.take(y_new_all, my)[None]  # (1,) — only our row is meaningful
+
+        def leaf(x_block: jax.Array, x_full: jax.Array) -> jax.Array:
+            xf = x_full.astype(jnp.float32)
+            # zero rows (non-in-neighbors) stay zero after the bias multiply,
+            # and meet zero weights in a_row — contributing exactly +-0.0,
+            # as in the dense einsum where the zero lives in A instead.
+            biased = xf * y_full.reshape((-1,) + (1,) * (x_full.ndim - 1))
+            num = jnp.einsum(
+                "kj,j...->k...", a_row, biased, precision=jax.lax.Precision.HIGHEST
+            )
+            out = num / y_new.reshape((-1,) + (1,) * (x_full.ndim - 1))
+            return out.astype(x_block.dtype)
+
+        return PushSumState(mass=y_new), jax.tree.map(leaf, params, params_full)
 
 
 # ---------------------------------------------------------------------------

@@ -31,6 +31,7 @@ from repro.configs.p2pl_mnist import (
     directed_k8,
     iid_k100,
     noniid_k2,
+    sharded_k8,
     timevarying_k2,
     timevarying_k8,
 )
@@ -58,8 +59,14 @@ def run_paper_experiment(
     eval_every: int = 1,
     seed: int = 0,
     verbose: bool = False,
+    peer_axis: str = "vmap",
 ) -> metrics_lib.RoundLog:
+    """``peer_axis``: "vmap" (stacked runtime, any device count) or "pod" (the
+    sharded runtime: one device per peer, bit-identical results — see
+    "Running sharded locally" in repro/launch/mesh.py)."""
     rounds = rounds or exp.rounds
+    if peer_axis not in ("vmap", "pod"):
+        raise ValueError(f"peer_axis must be 'vmap' or 'pod', got {peer_axis!r}")
     if data is None:
         data = synthetic.mnist_like()
     x_tr, y_tr, x_te, y_te = data
@@ -71,7 +78,15 @@ def run_paper_experiment(
     # data_sizes seed both the mixing weights and the protocol state (for
     # push_sum: initial mass proportional to n_k -> data-weighted consensus).
     state = p2p.init_state(jax.random.PRNGKey(seed), mlp.init_2nn, cfg, data_sizes=sizes)
-    round_fn = p2p.make_round_fn(mlp.loss_2nn, cfg, data_sizes=sizes)
+    if peer_axis == "pod":
+        from repro.launch import mesh as mesh_lib
+        from repro.sharding import specs as specs_lib
+
+        mesh = mesh_lib.make_peer_mesh(cfg.num_peers)  # fails fast if short on devices
+        round_fn = p2p.make_sharded_round_fn(mlp.loss_2nn, cfg, mesh, data_sizes=sizes)
+        state = specs_lib.shard_peer_tree(state, mesh)
+    else:
+        round_fn = p2p.make_round_fn(mlp.loss_2nn, cfg, data_sizes=sizes)
 
     # stratified eval groups: seen/unseen per the union of peer classes
     if exp.peer_classes:
@@ -99,13 +114,19 @@ def run_paper_experiment(
         after_local, after_cons, losses = round_fn(state, (jnp.asarray(bx), jnp.asarray(by)))
         state = after_cons
         if r % eval_every == 0:
-            acc_l = {k: np.asarray(v) for k, v in eval_fn(after_local.params).items()}
-            acc_c = {k: np.asarray(v) for k, v in eval_fn(after_cons.params).items()}
+            params_l, params_c = after_local.params, after_cons.params
+            if peer_axis == "pod":
+                # evaluation runs on the default device: pull the peer-sharded
+                # params to host once per eval instead of per metric
+                params_l = jax.device_get(params_l)
+                params_c = jax.device_get(params_c)
+            acc_l = {k: np.asarray(v) for k, v in eval_fn(params_l).items()}
+            acc_c = {k: np.asarray(v) for k, v in eval_fn(params_c).items()}
             log.record(
                 local_acc=acc_l,
                 consensus_acc=acc_c,
-                drift=float(consensus_lib.pairwise_drift(after_local.params)),
-                consensus_error=float(consensus_lib.consensus_error(after_cons.params)),
+                drift=float(consensus_lib.pairwise_drift(params_l)),
+                consensus_error=float(consensus_lib.consensus_error(params_c)),
                 train_loss=float(jnp.mean(losses)),
             )
             if verbose:
@@ -189,7 +210,14 @@ def main(argv=None):
     ap.add_argument("--experiment", default="noniid_affinity",
                     choices=["iid_k100", "noniid_local_dsgd", "noniid_affinity",
                              "noniid_dsgd", "p2p_lm",
-                             "timevarying_k2", "timevarying_k8", "directed_k8"])
+                             "timevarying_k2", "timevarying_k8", "directed_k8",
+                             "sharded_k8"])
+    ap.add_argument("--peer-axis", default="vmap", choices=["vmap", "pod"],
+                    help="how the K peer axis executes: 'vmap' (stacked "
+                         "runtime, any device count) or 'pod' (shard_map over "
+                         "a real mesh, one device per peer — on CPU set "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=K "
+                         "before launch; results are bit-identical)")
     ap.add_argument("--rounds", type=int, default=None)
     ap.add_argument("--topology", default="complete")
     ap.add_argument("--local-steps", type=int, default=10)
@@ -218,6 +246,8 @@ def main(argv=None):
 
     t0 = time.time()
     if args.experiment == "p2p_lm":
+        if args.peer_axis != "vmap":
+            ap.error("p2p_lm runs the vmap runtime only (--peer-axis vmap)")
         out = run_p2p_lm(args.arch, rounds=args.rounds or 8, verbose=True)
         print(json.dumps(out))
         return
@@ -247,6 +277,18 @@ def main(argv=None):
             schedule_rounds=args.schedule_rounds,
             link_survival_prob=args.link_survival_prob,
         )
+    elif args.experiment == "sharded_k8":
+        exp = sharded_k8(
+            args.schedule or "static",
+            args.protocol or "gossip",
+            args.algorithm,
+            args.local_steps,
+            schedule_rounds=args.schedule_rounds,
+            link_survival_prob=args.link_survival_prob,
+            round_robin_topologies=tuple(
+                t for t in args.round_robin_topologies.split(",") if t
+            ),
+        )
     elif args.experiment == "iid_k100":
         exp = iid_k100(args.topology)
     elif args.experiment == "noniid_local_dsgd":
@@ -259,7 +301,19 @@ def main(argv=None):
         exp = dataclasses.replace(
             exp, p2p=dataclasses.replace(exp.p2p, protocol=args.protocol)
         )
-    log = run_paper_experiment(exp, rounds=args.rounds, verbose=True)
+    if args.peer_axis == "pod" and jax.device_count() < exp.p2p.num_peers:
+        # fail fast, before data generation and tracing, instead of letting
+        # the first jitted round die with an opaque XLA sharding/shape error
+        ap.error(
+            f"--peer-axis pod needs one device per peer: experiment "
+            f"{exp.name!r} has num_peers={exp.p2p.num_peers} but only "
+            f"{jax.device_count()} jax device(s) are visible. On CPU, "
+            f"relaunch with XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{exp.p2p.num_peers} set before the first jax import."
+        )
+    log = run_paper_experiment(
+        exp, rounds=args.rounds, verbose=True, peer_axis=args.peer_axis
+    )
     print(f"done in {time.time()-t0:.1f}s")
     if args.out:
         os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)

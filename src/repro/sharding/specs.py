@@ -192,6 +192,43 @@ def cache_pspecs(
     return jax.tree_util.tree_map_with_path(one, cache_shapes)
 
 
+def peer_stacked_pspecs(tree: PyTree, *, peer_axis="pod") -> PyTree:
+    """Specs for a peer-STACKED tree: leading K axis sharded, scalars replicated.
+
+    This is the placement of the sharded peer-axis runtime's state
+    (``repro.core.p2p.P2PState``): every array leaf carries a leading peer
+    axis (params, momentum, biases, push-sum mass), the round counter is a
+    replicated scalar.  Works on arrays, ShapeDtypeStructs, and tracers —
+    ``make_sharded_round_fn`` builds its shard_map in/out specs with it.
+    """
+
+    def one(leaf):
+        if leaf.ndim == 0:
+            return P()
+        return P(peer_axis, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree.map(one, tree)
+
+
+def peer_batch_pspecs(tree: PyTree, *, peer_axis="pod") -> PyTree:
+    """Specs for a step-major peer batch tree: leaves (T, K, ...) — the peer
+    axis is dim 1 (dim 0 is the local-step axis scanned inside the round)."""
+
+    def one(leaf):
+        if leaf.ndim < 2:
+            raise ValueError(
+                f"peer batches are step-major (T, K, ...); got rank {leaf.ndim}"
+            )
+        return P(None, peer_axis, *([None] * (leaf.ndim - 2)))
+
+    return jax.tree.map(one, tree)
+
+
+def shard_peer_tree(tree: PyTree, mesh, *, peer_axis="pod") -> PyTree:
+    """device_put a peer-stacked tree onto the mesh, K axis over ``peer_axis``."""
+    return jax.device_put(tree, to_named(mesh, peer_stacked_pspecs(tree, peer_axis=peer_axis)))
+
+
 def batch_pspecs(batch_shapes: PyTree, *, peer_axis=None) -> PyTree:
     """Specs for an UNSTACKED batch tree: batch dim over `data` (+peer prefix)."""
 

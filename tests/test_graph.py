@@ -85,3 +85,55 @@ def test_spectral_gap_ordering():
         g = gl.build_graph(topo, 16)
         gaps[topo] = gl.spectral_gap(gl.mixing_matrix(g, "metropolis"))
     assert gaps["complete"] > gaps["torus2d"] > gaps["ring"] > gaps["chain"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Permutation-lane extraction (sharded peer-axis runtime)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("topo,k", [
+    ("complete", 5), ("ring", 6), ("chain", 4), ("star", 7),
+    ("hypercube", 8), ("erdos_renyi", 10), ("directed_ring", 6),
+    ("disconnected", 4),
+])
+def test_edge_color_lanes_partition_the_edge_set(topo, k):
+    """Lanes cover every edge exactly once, and each lane is ppermute-legal
+    (distinct sources, distinct destinations)."""
+    g = gl.build_graph(topo, k)
+    lanes = gl.edge_color_lanes(g.adjacency)
+    seen = np.zeros((k, k), dtype=int)
+    for lane in lanes:
+        srcs = [s for s, _ in lane.perm]
+        dsts = [d for _, d in lane.perm]
+        assert len(set(srcs)) == len(srcs), "duplicate source in one ppermute"
+        assert len(set(dsts)) == len(dsts), "duplicate destination in one ppermute"
+        for s, d in lane.perm:
+            seen[s, d] += 1
+        # src_for_dst is the receiver-side view of the same pairs
+        src_map = np.asarray(lane.src_for_dst)
+        assert src_map.shape == (k,)
+        for d in range(k):
+            if src_map[d] == k:
+                assert d not in dsts
+            else:
+                assert (int(src_map[d]), d) in lane.perm
+    np.testing.assert_array_equal(seen, g.adjacency.astype(int))
+
+
+def test_edge_color_lanes_count_is_tight_for_regular_graphs():
+    ring = gl.build_graph("ring", 6)
+    assert len(gl.edge_color_lanes(ring.adjacency)) == 2  # one per direction
+    d_ring = gl.build_graph("directed_ring", 6)
+    assert len(gl.edge_color_lanes(d_ring.adjacency)) == 1
+    assert gl.edge_color_lanes(np.zeros((4, 4), dtype=bool)) == ()
+
+
+def test_schedule_lanes_cover_the_period_union():
+    sched = gl.link_dropout_schedule(gl.build_graph("ring", 8), 0.6, 5, seed=3)
+    lanes = gl.schedule_lanes(sched)
+    covered = np.zeros((8, 8), dtype=bool)
+    for lane in lanes:
+        for s, d in lane.perm:
+            covered[s, d] = True
+    np.testing.assert_array_equal(covered, sched.union_graph().adjacency)

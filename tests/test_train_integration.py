@@ -77,8 +77,8 @@ def test_cli_round_robin_and_protocol_flags(data, capsys, monkeypatch):
 
     monkeypatch.setattr(
         train_mod, "run_paper_experiment",
-        lambda exp, rounds=None, verbose=False: run_paper_experiment(
-            exp, rounds=1, data=data
+        lambda exp, rounds=None, verbose=False, peer_axis="vmap": run_paper_experiment(
+            exp, rounds=1, data=data, peer_axis=peer_axis
         ),
     )
     train_mod.main([
