@@ -14,12 +14,11 @@ stays self-describing:
 """
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks.timing import median_us
 from repro.core import consensus as consensus_lib
 from repro.core import p2p
 
@@ -27,6 +26,7 @@ K = 8
 DIM = 256  # per-leaf width: big enough that mixing cost is visible
 T_STEPS = 4
 ROUNDS = 20
+TRIALS = 5
 
 
 def _quad_loss(params, batch):
@@ -38,12 +38,12 @@ def _init_fn(key):
 
 
 def _bench_round_fn(fn, state, batches, rounds):
-    _, state, _ = fn(state, batches)  # compile
-    t0 = time.time()
-    for _ in range(rounds):
-        _, state, _ = fn(state, batches)
-    jax.block_until_ready(state.params)
-    us = (time.time() - t0) / rounds * 1e6
+    # median-of-TRIALS with block_until_ready before BOTH timestamps of every
+    # trial (see benchmarks.timing) — single-trial timing on a shared runner
+    # is dominated by scheduler jitter
+    us, state = median_us(
+        lambda s: fn(s, batches)[1], state, calls=rounds, trials=TRIALS
+    )
     # consensus error on HOST params: the sharded run's params live across
     # devices, and an on-device reduction would compile a different program
     # than the vmap run's — hiding the runtimes' actual bit-equality

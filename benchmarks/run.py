@@ -1,8 +1,9 @@
 """Benchmark orchestrator.  One function per paper figure + kernel micro-
 benches.  Prints ``name,us_per_call,derived`` CSV (see figures.py/kernels.py)
-and serializes the consensus-protocol rows to ``BENCH_protocols.json`` so the
-per-protocol perf trajectory (spectral gap, consensus error, wall-clock per
-round) accumulates across PRs.
+and serializes the consensus-protocol rows to ``BENCH_protocols.json`` and the
+round-loop driver rows to ``BENCH_roundloop.json`` so the perf trajectories
+(spectral gap, consensus error, wall-clock per round, scan-vs-python speedup)
+accumulate across PRs.  See benchmarks/README.md for the file contract.
 
     PYTHONPATH=src python -m benchmarks.run              # reduced (CI) scale
     PYTHONPATH=src python -m benchmarks.run --full       # paper scale
@@ -16,6 +17,16 @@ import sys
 import traceback
 
 
+def _write_rows(path: str, rows: list[dict], what: str) -> None:
+    if rows:
+        with open(path, "w") as f:
+            json.dump({"rows": rows}, f, indent=2)
+        print(f"wrote {path} ({len(rows)} rows)", file=sys.stderr)
+    else:
+        print(f"NOT writing {path}: only {what} benchmarks serialize these "
+              "rows and none were selected", file=sys.stderr)
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale rounds/data")
@@ -23,43 +34,54 @@ def main(argv=None) -> None:
     ap.add_argument("--json-out", default="BENCH_protocols.json",
                     help="where to write the protocol benchmark rows "
                          "('' disables)")
+    ap.add_argument("--roundloop-json-out", default="BENCH_roundloop.json",
+                    help="where to write the round-loop driver benchmark rows "
+                         "('' disables)")
     args = ap.parse_args(argv)
 
     from benchmarks.figures import ALL_FIGURES
     from benchmarks.kernels import ALL_KERNELS
     from benchmarks.peer_axis import ALL_PEER_AXIS
     from benchmarks.protocols import ALL_PROTOCOLS
+    from benchmarks.roundloop import ALL_ROUNDLOOP
     from benchmarks.schedules import ALL_SCHEDULES
 
     only = set(args.only.split(",")) if args.only else None
     failures = 0
     protocol_rows = []
+    roundloop_rows = []
     print("name,us_per_call,derived")
     for name, fn in {**ALL_KERNELS, **ALL_FIGURES, **ALL_SCHEDULES,
-                     **ALL_PROTOCOLS, **ALL_PEER_AXIS}.items():
+                     **ALL_PROTOCOLS, **ALL_PEER_AXIS, **ALL_ROUNDLOOP}.items():
         if only and name not in only:
             continue
         try:
             out = fn(args.full) if name not in ALL_KERNELS else fn()
             for row_name, us, derived in out:
                 print(f"{row_name},{us:.1f},{derived}", flush=True)
+            rows = [
+                {"name": row_name, "us_per_call": round(us, 1), "derived": derived}
+                for row_name, us, derived in out
+            ]
             if name in ALL_PROTOCOLS:
-                protocol_rows += [
-                    {"name": row_name, "us_per_call": round(us, 1), "derived": derived}
-                    for row_name, us, derived in out
-                ]
+                protocol_rows += rows
+            if name in ALL_ROUNDLOOP:
+                roundloop_rows += rows
         except Exception:  # noqa: BLE001
             failures += 1
             print(f"{name},ERROR,0", flush=True)
             traceback.print_exc(limit=5, file=sys.stderr)
     if args.json_out:
-        if protocol_rows:
-            with open(args.json_out, "w") as f:
-                json.dump({"rows": protocol_rows}, f, indent=2)
-            print(f"wrote {args.json_out} ({len(protocol_rows)} rows)", file=sys.stderr)
+        _write_rows(args.json_out, protocol_rows, "proto_*")
+    if args.roundloop_json_out:
+        if any("SKIPPED" in row["name"] for row in roundloop_rows):
+            # a <8-device run has no pod rows: writing it would clobber a
+            # committed baseline with a file the CI gate can never match
+            print(f"NOT writing {args.roundloop_json_out}: pod rows were "
+                  "SKIPPED (need 8 devices — set XLA_FLAGS="
+                  "--xla_force_host_platform_device_count=8)", file=sys.stderr)
         else:
-            print(f"NOT writing {args.json_out}: only proto_* benchmarks "
-                  "serialize rows and none were selected", file=sys.stderr)
+            _write_rows(args.roundloop_json_out, roundloop_rows, "roundloop")
     if failures:
         sys.exit(1)
 

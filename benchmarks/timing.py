@@ -1,0 +1,53 @@
+"""Shared wall-clock measurement discipline for the benchmark suite.
+
+Two historical bugs this module exists to prevent:
+
+* **Async dispatch skew** — jax dispatches asynchronously, so a timestamp
+  taken without a ``block_until_ready()`` immediately before it measures
+  enqueue time, not execution time; worse, work left in flight from warmup
+  (or a previous trial) bleeds into the timed region.  ``median_us`` blocks
+  on the carried value before BOTH the start and the stop timestamp.
+* **Single-trial noise** — one trial on a shared CI runner is dominated by
+  scheduler jitter; a median over several trials is stable enough to commit
+  to a BENCH_*.json and diff across PRs.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, TypeVar
+
+import jax
+import numpy as np
+
+T = TypeVar("T")
+
+
+def median_us(
+    step: Callable[[T], T],
+    carry: T,
+    *,
+    calls: int,
+    trials: int,
+    warmup: int = 1,
+) -> tuple[float, T]:
+    """Median-of-``trials`` microseconds per ``step`` call.
+
+    ``step`` maps a carried value (e.g. a training state) to its successor;
+    each trial times ``calls`` sequential steps.  The carry is blocked on
+    before the start timestamp (so no earlier work bleeds in) and before the
+    stop timestamp (so the timed work has actually finished).  Returns
+    ``(us_per_call, final_carry)`` — the carry keeps evolving across trials,
+    which is fine for steady-state timing and lets callers derive check
+    values from a deterministic total call count.
+    """
+    for _ in range(warmup):
+        carry = step(carry)
+    samples = []
+    for _ in range(trials):
+        carry = jax.block_until_ready(carry)
+        t0 = time.perf_counter()
+        for _ in range(calls):
+            carry = step(carry)
+        carry = jax.block_until_ready(carry)
+        samples.append((time.perf_counter() - t0) / calls * 1e6)
+    return float(np.median(samples)), carry

@@ -33,8 +33,9 @@ import numpy as np
 PyTree = Any
 
 
-def _mix_leaf(w_mat: jax.Array, leaf: jax.Array) -> jax.Array:
-    """einsum over the leading peer axis, f32 accumulation."""
+def mix_leaf(w_mat: jax.Array, leaf: jax.Array) -> jax.Array:
+    """einsum over the leading peer axis, f32 accumulation (one leaf of
+    ``mix_stacked``; public so leaf-pipelined consumers can call it per leaf)."""
     out = jnp.einsum(
         "kj,j...->k...",
         w_mat.astype(jnp.float32),
@@ -46,7 +47,7 @@ def _mix_leaf(w_mat: jax.Array, leaf: jax.Array) -> jax.Array:
 
 def mix_stacked(w_mat: jax.Array, stacked: PyTree) -> PyTree:
     """Apply mixing matrix across the leading K axis of every leaf."""
-    return jax.tree.map(lambda x: _mix_leaf(w_mat, x), stacked)
+    return jax.tree.map(lambda x: mix_leaf(w_mat, x), stacked)
 
 
 # ---------------------------------------------------------------------------
@@ -113,6 +114,25 @@ def mix_sparse(
 # ---------------------------------------------------------------------------
 
 
+def gather_peer_leaf(v: jax.Array, axis_name: str, lanes, num_peers: int) -> jax.Array:
+    """One leaf of ``gather_peer_rows``: (1, ...) block -> stacked (K, ...).
+
+    Factored out so the sharded consensus phase can pipeline leaves — issuing
+    leaf ``i+1``'s ppermutes while leaf ``i`` is still mixing (see
+    ``repro.core.p2p.consensus_phase_sharded``) — without changing the
+    per-leaf arithmetic that the bit-parity contract pins down.
+    """
+    my = jax.lax.axis_index(axis_name)
+    full = jnp.zeros((num_peers,) + v.shape[1:], v.dtype)
+    full = full.at[my].set(v[0])
+    for lane in lanes:
+        recv = jax.lax.ppermute(v, axis_name, perm=list(lane.perm))
+        src = jnp.asarray(lane.src_for_dst, jnp.int32)[my]
+        # sentinel src == num_peers marks "no payload this lane": dropped
+        full = full.at[src].set(recv[0], mode="drop")
+    return full
+
+
 def gather_peer_rows(block: PyTree, axis_name: str, lanes, num_peers: int) -> PyTree:
     """Rebuild the stacked (K, ...) peer array inside a shard_map block.
 
@@ -124,19 +144,9 @@ def gather_peer_rows(block: PyTree, axis_name: str, lanes, num_peers: int) -> Py
     are zero on exactly those rows, so the zeros never contribute (and the
     reconstructed einsum stays bit-identical to the dense stacked form).
     """
-    my = jax.lax.axis_index(axis_name)
-
-    def leaf(v: jax.Array) -> jax.Array:
-        full = jnp.zeros((num_peers,) + v.shape[1:], v.dtype)
-        full = full.at[my].set(v[0])
-        for lane in lanes:
-            recv = jax.lax.ppermute(v, axis_name, perm=list(lane.perm))
-            src = jnp.asarray(lane.src_for_dst, jnp.int32)[my]
-            # sentinel src == num_peers marks "no payload this lane": dropped
-            full = full.at[src].set(recv[0], mode="drop")
-        return full
-
-    return jax.tree.map(leaf, block)
+    return jax.tree.map(
+        lambda v: gather_peer_leaf(v, axis_name, lanes, num_peers), block
+    )
 
 
 def mix_psum(x: PyTree, axis_name: str, *, self_weight: float, peer_weight: float) -> PyTree:

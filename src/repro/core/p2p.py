@@ -24,9 +24,15 @@ This module is the *stacked* runtime: every state leaf carries a leading K
   * ``make_sharded_round_fn`` — the K axis is ``shard_map``'d over a real mesh
     (``peer_axis="pod"``): each mesh slice holds ONE peer's replica, local
     phases run embarrassingly parallel, and the schedule-aware mix lowers to
-    ``ppermute`` sends along the round's edges (``graph.schedule_lanes``).
+    ``ppermute`` sends along the round's edges (``graph.schedule_lanes``),
+    leaf-pipelined so the next leaf's sends overlap the current leaf's mix.
     See repro/launch/train.py (``--peer-axis pod``) for the production path
     and repro/kernels/consensus_mix for the fused TPU kernel.
+
+Both modes dispatch one jitted round per call; ``make_scan_driver`` wraps
+EITHER round step in a ``lax.scan`` over a whole eval-period chunk of rounds
+(donated state buffers, stacked per-round metrics) — one dispatch and at most
+one host transfer per chunk, bit-identical results.
 
 The consensus step itself is pluggable (``P2PConfig.protocol``, see
 repro/core/protocols.py): ``gossip`` is the paper's row-stochastic mix and
@@ -428,9 +434,17 @@ def consensus_phase_sharded(
     Every ``P2PState`` leaf carries this peer's (1, ...) block of the stacked
     axis; ``consts`` is the round's full (K, K) slice (replicated — protocol
     matrices are tiny next to parameters).  Neighbor parameters arrive through
-    one ``ppermute`` per ``PermLane`` (``consensus.gather_peer_rows``); the mix
+    one ``ppermute`` per ``PermLane`` (``consensus.gather_peer_leaf``); the mix
     is then this peer's (1, K) row of the same einsum the stacked runtime
     computes, which keeps the two runtimes bit-identical in fp32.
+
+    The leaves are *pipelined* (double-buffered): leaf ``i+1``'s ppermute
+    lanes are issued before leaf ``i``'s reconstruction is consumed by its mix
+    matvec, and an ``optimization_barrier`` pins the pair so XLA's scheduler
+    cannot serialize the in-flight sends behind the compute.  On a real mesh
+    the lane traffic for the next leaf therefore hides behind the current
+    leaf's matvecs; the per-leaf arithmetic is untouched, so the fp32
+    bit-parity contract with the vmap runtime holds unchanged.
     """
     if cfg.consensus_steps == 0:
         return state._replace(round_idx=state.round_idx + 1)
@@ -441,34 +455,173 @@ def consensus_phase_sharded(
     beta_row = jnp.take(consts.beta, my, axis=0)[None]  # (1, K)
     params, d_bias, proto_state = state.params, state.d_bias, state.protocol
     has_nbrs = jnp.sum(beta_row, axis=1) > 0  # (1,)
-    for _ in range(cfg.consensus_steps):
-        # the round's edges, once per step: every consumer below reads rows of
-        # this reconstruction (zero rows never meet nonzero weights)
-        params_full = consensus_lib.gather_peer_rows(params, axis_name, lanes, k)
-        if cfg.use_affinity_d:
-            nbr_avg = consensus_lib.mix_stacked(beta_row, params_full)
-            d_bias = jax.tree.map(
-                lambda avg, w: jnp.where(
-                    has_nbrs.reshape((-1,) + (1,) * (w.ndim - 1)),
-                    (avg - w) / cfg.local_steps,
-                    jnp.zeros_like(w),
-                ),
-                nbr_avg,
-                params,
+    b_bias_leaves = jax.tree.leaves(state.b_bias)
+    # a protocol written against the pre-scan interface (whole-tree
+    # ``mix_sharded`` override, no ``mix_sharded_begin``) still works: it runs
+    # the unpipelined whole-tree path instead of silently hitting the base
+    # class's NotImplementedError (or worse, ignoring its override)
+    legacy_mix = (
+        type(proto).mix_sharded_begin
+        is protocols_lib.ConsensusProtocol.mix_sharded_begin
+    )
+    if legacy_mix:
+        for _ in range(cfg.consensus_steps):
+            params_full = consensus_lib.gather_peer_rows(params, axis_name, lanes, k)
+            if cfg.use_affinity_d:
+                nbr_avg = consensus_lib.mix_stacked(beta_row, params_full)
+                d_bias = jax.tree.map(
+                    lambda avg, w: jnp.where(
+                        has_nbrs.reshape((-1,) + (1,) * (w.ndim - 1)),
+                        (avg - w) / cfg.local_steps,
+                        jnp.zeros_like(w),
+                    ),
+                    nbr_avg,
+                    params,
+                )
+            proto_state, mixed = proto.mix_sharded(
+                proto_state, params, params_full, consts.w,
+                axis_name=axis_name, lanes=lanes,
             )
-        proto_state, mixed = proto.mix_sharded(
-            proto_state, params, params_full, consts.w, axis_name=axis_name, lanes=lanes
+            if cfg.use_affinity_b:
+                mixed = jax.tree.map(
+                    lambda m, b: m + cfg.eta_b * b, mixed, state.b_bias
+                )
+            params = mixed
+        return state._replace(
+            params=params, d_bias=d_bias, protocol=proto_state,
+            round_idx=state.round_idx + 1,
         )
-        if cfg.use_affinity_b:
-            mixed = jax.tree.map(
-                lambda m, b: m + cfg.eta_b * b, mixed, state.b_bias
+
+    for _ in range(cfg.consensus_steps):
+        # scalar/context work once per step (push_sum's mass lane rides here)
+        proto_state, ctx = proto.mix_sharded_begin(
+            proto_state, consts.w, axis_name=axis_name, lanes=lanes
+        )
+        leaves, treedef = jax.tree.flatten(params)
+        mixed_leaves, d_leaves = [], []
+        nxt = (
+            consensus_lib.gather_peer_leaf(leaves[0], axis_name, lanes, k)
+            if leaves else None
+        )
+        for i, x in enumerate(leaves):
+            x_full = nxt
+            # issue leaf i+1's lanes BEFORE leaf i's reconstruction is consumed
+            nxt = (
+                consensus_lib.gather_peer_leaf(leaves[i + 1], axis_name, lanes, k)
+                if i + 1 < len(leaves) else None
             )
-        params = mixed
+            d_i = None
+            if cfg.use_affinity_d:
+                # d_k <- (1/T) sum_j beta_kj (w_j - w_k); isolated peers
+                # (all-zero beta row this round) keep d = 0
+                nbr_avg = consensus_lib.mix_leaf(beta_row, x_full)
+                d_i = jnp.where(
+                    has_nbrs.reshape((-1,) + (1,) * (x.ndim - 1)),
+                    (nbr_avg - x) / cfg.local_steps,
+                    jnp.zeros_like(x),
+                )
+            m_i = proto.mix_sharded_leaf(ctx, x, x_full)
+            if cfg.use_affinity_b:
+                m_i = m_i + cfg.eta_b * b_bias_leaves[i]
+            if nxt is not None:
+                # double-buffer: group the next leaf's in-flight lanes with
+                # this leaf's results so neither side is sunk past the other
+                if d_i is not None:
+                    nxt, m_i, d_i = jax.lax.optimization_barrier((nxt, m_i, d_i))
+                else:
+                    nxt, m_i = jax.lax.optimization_barrier((nxt, m_i))
+            mixed_leaves.append(m_i)
+            d_leaves.append(d_i)
+        params = jax.tree.unflatten(treedef, mixed_leaves)
+        if cfg.use_affinity_d:
+            d_bias = jax.tree.unflatten(treedef, d_leaves)
 
     return state._replace(
         params=params, d_bias=d_bias, protocol=proto_state,
         round_idx=state.round_idx + 1,
     )
+
+
+def _make_round_step(
+    loss_fn: LossFn,
+    cfg: P2PConfig,
+    data_sizes: np.ndarray | None = None,
+    *,
+    mesh=None,
+    axis_name: str = "pod",
+):
+    """The UNJITTED (state, batches) -> (after_local, after_consensus, losses)
+    round step shared by every driver.
+
+    ``mesh=None`` builds the stacked/vmap step; a mesh builds the sharded
+    (``shard_map`` over ``axis_name``) step.  ``make_round_fn`` /
+    ``make_sharded_round_fn`` jit it per round; ``make_scan_driver`` scans a
+    whole chunk of calls inside one jitted program.  Sharing the step is what
+    keeps the python-loop and scan drivers running the SAME per-round
+    expression graph — the basis of their fp32 bit-parity contract.
+    """
+    if mesh is None:
+        consts_np, _ = protocol_constants(cfg, data_sizes)
+        consts = protocols_lib.ProtocolConstants(
+            w=jnp.asarray(consts_np.w, jnp.float32),  # (R, K, K)
+            beta=jnp.asarray(consts_np.beta, jnp.float32),
+        )
+        period = consts.w.shape[0]
+
+        def step(state: P2PState, batches: PyTree):
+            idx = jax.lax.rem(state.round_idx, jnp.int32(period))
+            return run_round(
+                state, loss_fn, batches, cfg, protocols_lib.round_constants(consts, idx)
+            )
+
+        return step
+
+    from repro.sharding import specs as specs_lib
+
+    axis_sizes = dict(mesh.shape)
+    if axis_sizes.get(axis_name) != cfg.num_peers:
+        raise ValueError(
+            f"mesh axis {axis_name!r} must have exactly num_peers="
+            f"{cfg.num_peers} slices, got mesh shape {axis_sizes} "
+            "(see repro.launch.mesh.make_peer_mesh)"
+        )
+    consts_np, sched = protocol_constants(cfg, data_sizes)
+    w_dev = jnp.asarray(consts_np.w, jnp.float32)  # (R, K, K)
+    beta_dev = jnp.asarray(consts_np.beta, jnp.float32)
+    period = w_dev.shape[0]
+    lanes = graph_lib.schedule_lanes(sched)
+    shard_map = _shard_map_fn()
+    from jax.sharding import PartitionSpec as P
+
+    def block(state: P2PState, batches: PyTree, w_stack, beta_stack):
+        # the per-step loss means all-gather inside the block (axis_name), so
+        # the (T,) output is replicated — and reduced over the same (K,)
+        # vector as the vmap runtime
+        after_local, losses = local_phase(
+            state, loss_fn, batches, cfg, axis_name=axis_name
+        )
+        idx = jax.lax.rem(state.round_idx, jnp.int32(period))
+        consts = protocols_lib.round_constants(
+            protocols_lib.ProtocolConstants(w=w_stack, beta=beta_stack), idx
+        )
+        after_cons = consensus_phase_sharded(
+            after_local, cfg, consts, axis_name=axis_name, lanes=lanes
+        )
+        return after_local, after_cons, losses
+
+    def step(state: P2PState, batches: PyTree):
+        s_specs = specs_lib.peer_stacked_pspecs(state, peer_axis=axis_name)
+        b_specs = specs_lib.peer_batch_pspecs(batches, peer_axis=axis_name)
+        c_spec = P(None, None, None)
+        mapped = shard_map(
+            block,
+            mesh=mesh,
+            in_specs=(s_specs, b_specs, c_spec, c_spec),
+            out_specs=(s_specs, s_specs, P(None)),
+        )
+        return mapped(state, batches, w_dev, beta_dev)
+
+    return step
 
 
 def make_sharded_round_fn(
@@ -494,54 +647,9 @@ def make_sharded_round_fn(
     runs should place the state with ``sharding.specs.shard_peer_tree`` to
     avoid a per-round host transfer.
     """
-    from repro.sharding import specs as specs_lib
-
-    axis_sizes = dict(mesh.shape)
-    if axis_sizes.get(axis_name) != cfg.num_peers:
-        raise ValueError(
-            f"mesh axis {axis_name!r} must have exactly num_peers="
-            f"{cfg.num_peers} slices, got mesh shape {axis_sizes} "
-            "(see repro.launch.mesh.make_peer_mesh)"
-        )
-    consts_np, sched = protocol_constants(cfg, data_sizes)
-    w_dev = jnp.asarray(consts_np.w, jnp.float32)  # (R, K, K)
-    beta_dev = jnp.asarray(consts_np.beta, jnp.float32)
-    period = w_dev.shape[0]
-    lanes = graph_lib.schedule_lanes(sched)
-    shard_map = _shard_map_fn()
-
-    def block(state: P2PState, batches: PyTree, w_stack, beta_stack):
-        # the per-step loss means all-gather inside the block (axis_name), so
-        # the (T,) output is replicated — and reduced over the same (K,)
-        # vector as the vmap runtime
-        after_local, losses = local_phase(
-            state, loss_fn, batches, cfg, axis_name=axis_name
-        )
-        idx = jax.lax.rem(state.round_idx, jnp.int32(period))
-        consts = protocols_lib.round_constants(
-            protocols_lib.ProtocolConstants(w=w_stack, beta=beta_stack), idx
-        )
-        after_cons = consensus_phase_sharded(
-            after_local, cfg, consts, axis_name=axis_name, lanes=lanes
-        )
-        return after_local, after_cons, losses
-
-    from jax.sharding import PartitionSpec as P
-
-    @jax.jit
-    def round_fn(state: P2PState, batches: PyTree):
-        s_specs = specs_lib.peer_stacked_pspecs(state, peer_axis=axis_name)
-        b_specs = specs_lib.peer_batch_pspecs(batches, peer_axis=axis_name)
-        c_spec = P(None, None, None)
-        mapped = shard_map(
-            block,
-            mesh=mesh,
-            in_specs=(s_specs, b_specs, c_spec, c_spec),
-            out_specs=(s_specs, s_specs, P(None)),
-        )
-        return mapped(state, batches, w_dev, beta_dev)
-
-    return round_fn
+    return jax.jit(
+        _make_round_step(loss_fn, cfg, data_sizes, mesh=mesh, axis_name=axis_name)
+    )
 
 
 def make_round_fn(loss_fn: LossFn, cfg: P2PConfig, data_sizes: np.ndarray | None = None):
@@ -552,21 +660,58 @@ def make_round_fn(loss_fn: LossFn, cfg: P2PConfig, data_sizes: np.ndarray | None
     one compile covers every round of a time-varying run — for any protocol —
     with no per-round host sync.
     """
-    consts_np, _ = protocol_constants(cfg, data_sizes)
-    consts = protocols_lib.ProtocolConstants(
-        w=jnp.asarray(consts_np.w, jnp.float32),  # (R, K, K)
-        beta=jnp.asarray(consts_np.beta, jnp.float32),
-    )
-    period = consts.w.shape[0]
+    return jax.jit(_make_round_step(loss_fn, cfg, data_sizes))
 
-    @jax.jit
-    def round_fn(state: P2PState, batches: PyTree):
-        idx = jax.lax.rem(state.round_idx, jnp.int32(period))
-        return run_round(
-            state, loss_fn, batches, cfg, protocols_lib.round_constants(consts, idx)
-        )
 
-    return round_fn
+def make_scan_driver(
+    loss_fn: LossFn,
+    cfg: P2PConfig,
+    data_sizes: np.ndarray | None = None,
+    *,
+    mesh=None,
+    axis_name: str = "pod",
+    donate: bool = True,
+):
+    """Fused multi-round driver: a whole chunk of rounds per jitted call.
+
+    Returns ``drive(state, batches) -> (after_local, final_state, losses)``
+    where every ``batches`` leaf carries a leading chunk axis C on top of the
+    per-round layout — (C, T, K, ...) — and the C rounds run inside ONE
+    ``lax.scan`` of the same round step the python-loop drivers jit
+    (``_make_round_step``), so the results are fp32 bit-identical to C calls
+    of ``make_round_fn`` / ``make_sharded_round_fn``.  ``after_local`` is the
+    last round's post-local-phase state (the paper's eval instrument needs
+    both phase boundaries), ``losses`` is the stacked (C, T) per-round series.
+
+    Why it's faster than the python loop: one dispatch (and one
+    ``device_get``, if the caller fetches anything) per C rounds instead of
+    per round, round constants selected by ``round_idx % R`` inside the scan
+    carry, and — with ``donate=True`` — ``donate_argnums`` on the input
+    ``P2PState``, so params/opt/protocol buffers are reused in place instead
+    of reallocated every round.  The donated input is CONSUMED: after
+    ``drive(state, ...)`` the caller must use the returned state, never
+    ``state`` itself.
+
+    ``mesh=None`` scans the stacked/vmap runtime; a mesh scans the sharded
+    (``peer_axis="pod"``) runtime, chunk axis outside the ``shard_map``.
+    The chunk length C is not baked in: it is read from the batch shapes, and
+    each distinct C compiles once (drive with ONE chunk size per run to keep
+    the one-compile property).
+    """
+    step = _make_round_step(loss_fn, cfg, data_sizes, mesh=mesh, axis_name=axis_name)
+
+    def drive(state: P2PState, batches: PyTree):
+        def body(carry, batches_r):
+            st, _ = carry
+            after_local, after_cons, losses = step(st, batches_r)
+            return (after_cons, after_local), losses
+
+        # the second carry slot threads the LAST round's after-local state out
+        # of the scan (stacking every round's would hold C copies of params)
+        (final, last_local), losses = jax.lax.scan(body, (state, state), batches)
+        return last_local, final, losses
+
+    return jax.jit(drive, donate_argnums=(0,) if donate else ())
 
 
 # ---------------------------------------------------------------------------

@@ -102,6 +102,45 @@ class ConsensusProtocol:
         """One consensus step; returns (new proto_state, new params)."""
         raise NotImplementedError
 
+    def mix_sharded_begin(
+        self,
+        proto_state: PyTree,
+        w_mat: jax.Array,
+        *,
+        axis_name: str,
+        lanes,
+    ) -> tuple[PyTree, Any]:
+        """Per-consensus-step setup of the sharded mix, run ONCE per step.
+
+        Everything that does not scale with the parameter leaves lives here:
+        selecting this peer's weight row, and (for push_sum) ppermuting the
+        scalar mass lane and computing the new mass.  Returns
+        ``(new_proto_state, ctx)``; ``ctx`` is an opaque value consumed by
+        ``mix_sharded_leaf`` for every parameter leaf of the step.  Splitting
+        the step this way lets the runtime pipeline leaves — issue leaf
+        ``i+1``'s ppermutes while leaf ``i``'s matvec is still running —
+        without touching per-leaf arithmetic (the bit-parity contract).
+
+        Protocols that predate this split (whole-tree ``mix_sharded``
+        override only) need not implement it: the sharded runtime detects
+        the base-class method and falls back to the unpipelined path.
+        """
+        raise NotImplementedError(
+            f"protocol {self.name!r} implements neither mix_sharded_begin/"
+            "mix_sharded_leaf (pipelined) nor a mix_sharded override (legacy)"
+        )
+
+    def mix_sharded_leaf(self, ctx, x_block: jax.Array, x_full: jax.Array) -> jax.Array:
+        """One leaf of the sharded mix: this peer's row of ``mix``'s einsum.
+
+        ``x_block`` is this peer's (1, ...) slice, ``x_full`` the (K, ...)
+        reconstruction from ``consensus.gather_peer_leaf`` (zero rows for
+        non-in-neighbors).  Must compute exactly the arithmetic of ``mix``
+        restricted to this peer's row — the runtime's parity contract is fp32
+        bit-identity with the vmap path.
+        """
+        raise NotImplementedError
+
     def mix_sharded(
         self,
         proto_state: PyTree,
@@ -118,11 +157,17 @@ class ConsensusProtocol:
         the stacked axis; ``params_full`` is the (K, ...) reconstruction from
         ``consensus.gather_peer_rows`` (zero rows for non-in-neighbors) and
         ``w_mat`` the round's full (K, K) protocol matrix (replicated — it is
-        tiny next to the parameters).  Must compute exactly the arithmetic of
-        ``mix`` restricted to this peer's row — the runtime's parity contract
-        is fp32 bit-identity with the vmap path.
+        tiny next to the parameters).  Implemented via ``mix_sharded_begin`` +
+        ``mix_sharded_leaf`` so the whole-tree and leaf-pipelined paths share
+        one definition of the arithmetic.
         """
-        raise NotImplementedError
+        proto_state, ctx = self.mix_sharded_begin(
+            proto_state, w_mat, axis_name=axis_name, lanes=lanes
+        )
+        mixed = jax.tree.map(
+            lambda b, f: self.mix_sharded_leaf(ctx, b, f), params, params_full
+        )
+        return proto_state, mixed
 
 
 class GossipProtocol(ConsensusProtocol):
@@ -152,20 +197,22 @@ class GossipProtocol(ConsensusProtocol):
     ) -> tuple[PyTree, PyTree]:
         return proto_state, consensus_lib.mix_stacked(consts.w, params)
 
-    def mix_sharded(
+    def mix_sharded_begin(
         self,
         proto_state: PyTree,
-        params: PyTree,
-        params_full: PyTree,
         w_mat: jax.Array,
         *,
         axis_name: str,
         lanes,
-    ) -> tuple[PyTree, PyTree]:
-        # this peer's (1, K) x (K, ...) row of the stacked path's einsum
+    ) -> tuple[PyTree, Any]:
+        # this peer's (1, K) row of the stacked path's mixing matrix
         my = jax.lax.axis_index(axis_name)
         w_row = jnp.take(w_mat, my, axis=0)[None]
-        return proto_state, consensus_lib.mix_stacked(w_row, params_full)
+        return proto_state, w_row
+
+    def mix_sharded_leaf(self, ctx, x_block: jax.Array, x_full: jax.Array) -> jax.Array:
+        # this peer's (1, K) x (K, ...) row of the stacked path's einsum
+        return consensus_lib.mix_leaf(ctx, x_full)
 
 
 class PushSumProtocol(ConsensusProtocol):
@@ -221,26 +268,22 @@ class PushSumProtocol(ConsensusProtocol):
 
         return PushSumState(mass=y_new), jax.tree.map(leaf, params)
 
-    def mix_sharded(
+    def mix_sharded_begin(
         self,
         proto_state: PushSumState,
-        params: PyTree,
-        params_full: PyTree,
         w_mat: jax.Array,
         *,
         axis_name: str,
         lanes,
-    ) -> tuple[PushSumState, PyTree]:
-        """Row-restricted ``mix``: the (K,) mass rides the same ppermute lanes
-        as the parameters, and the de-bias division happens on this row only.
+    ) -> tuple[PushSumState, Any]:
+        """Row-restricted ``mix``, scalar part: the (K,) mass rides the same
+        ppermute lanes as the parameters, once per consensus step.
 
-        Mirrors ``mix`` operation for operation (f32 bias multiply, HIGHEST-
-        precision einsums, divide, cast back) so the sharded runtime stays
-        bit-identical to the stacked one.  The scalar mass update runs the
-        FULL (K, K) x (K,) matvec and keeps one row: a (1, K) x (K,) dot is
-        too narrow for XLA to reduce in the same order as the stacked matvec,
-        while the full product — on zero-padded masses whose foreign rows are
-        discarded — shares its primitive shape and therefore its bits.
+        The scalar mass update runs the FULL (K, K) x (K,) matvec and keeps
+        one row: a (1, K) x (K,) dot is too narrow for XLA to reduce in the
+        same order as the stacked matvec, while the full product — on
+        zero-padded masses whose foreign rows are discarded — shares its
+        primitive shape and therefore its bits.
         """
         k = w_mat.shape[-1]
         my = jax.lax.axis_index(axis_name)
@@ -250,20 +293,26 @@ class PushSumProtocol(ConsensusProtocol):
         y_full = consensus_lib.gather_peer_rows(y, axis_name, lanes, k)  # (K,)
         y_new_all = jnp.einsum("kj,j->k", a, y_full, precision=jax.lax.Precision.HIGHEST)
         y_new = jnp.take(y_new_all, my)[None]  # (1,) — only our row is meaningful
+        return PushSumState(mass=y_new), (a_row, y_full, y_new)
 
-        def leaf(x_block: jax.Array, x_full: jax.Array) -> jax.Array:
-            xf = x_full.astype(jnp.float32)
-            # zero rows (non-in-neighbors) stay zero after the bias multiply,
-            # and meet zero weights in a_row — contributing exactly +-0.0,
-            # as in the dense einsum where the zero lives in A instead.
-            biased = xf * y_full.reshape((-1,) + (1,) * (x_full.ndim - 1))
-            num = jnp.einsum(
-                "kj,j...->k...", a_row, biased, precision=jax.lax.Precision.HIGHEST
-            )
-            out = num / y_new.reshape((-1,) + (1,) * (x_full.ndim - 1))
-            return out.astype(x_block.dtype)
+    def mix_sharded_leaf(self, ctx, x_block: jax.Array, x_full: jax.Array) -> jax.Array:
+        """Row-restricted ``mix``, one parameter leaf.
 
-        return PushSumState(mass=y_new), jax.tree.map(leaf, params, params_full)
+        Mirrors ``mix`` operation for operation (f32 bias multiply, HIGHEST-
+        precision einsums, divide, cast back) so the sharded runtime stays
+        bit-identical to the stacked one.
+        """
+        a_row, y_full, y_new = ctx
+        xf = x_full.astype(jnp.float32)
+        # zero rows (non-in-neighbors) stay zero after the bias multiply,
+        # and meet zero weights in a_row — contributing exactly +-0.0,
+        # as in the dense einsum where the zero lives in A instead.
+        biased = xf * y_full.reshape((-1,) + (1,) * (x_full.ndim - 1))
+        num = jnp.einsum(
+            "kj,j...->k...", a_row, biased, precision=jax.lax.Precision.HIGHEST
+        )
+        out = num / y_new.reshape((-1,) + (1,) * (x_full.ndim - 1))
+        return out.astype(x_block.dtype)
 
 
 # ---------------------------------------------------------------------------

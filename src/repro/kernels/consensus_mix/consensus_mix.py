@@ -53,8 +53,11 @@ def consensus_mix_2d(
     inv_t: jax.Array,  # scalar: 1 / local_steps
     *,
     block_rows: int = DEFAULT_BLOCK_ROWS,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array]:
+    from repro.kernels import lowering
+
+    interpret = lowering.resolve_interpret(interpret)
     r, lane = x.shape
     d = nbrs.shape[0]
     assert lane == LANE and nbrs.shape[1:] == (r, LANE)

@@ -15,7 +15,10 @@ appended all-ones lane of the flattened parameters while the sparse weights
 are pre-scaled by the sender's mass, so a single fused pass yields the mixed
 numerators, the new mass, AND the affinity d of the de-biased parameters.
 
-On CPU the kernel runs in interpret mode (the TPU path flips interpret=False).
+Every entry point takes ``interpret: bool | None = None`` and resolves the
+default through ``repro.kernels.lowering`` — interpret mode on CPU (the only
+mode Pallas can run there), compiled lowering on real accelerators, with the
+``REPRO_PALLAS_INTERPRET`` environment variable overriding either direction.
 """
 from __future__ import annotations
 
@@ -48,8 +51,9 @@ def consensus_mix_flat(
     beta: jax.Array,  # (D,)
     local_steps: int,
     *,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array]:
+    # interpret=None resolves inside consensus_mix_2d (repro.kernels.lowering)
     x2, n = _pad_to_lanes(x)
     nb2, _ = _pad_to_lanes(nbrs)
     rows = x2.shape[0]
@@ -98,7 +102,7 @@ def consensus_mix_stacked(
     beta: jax.Array,  # (K, D)
     local_steps: int,
     *,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> tuple[PyTree, PyTree]:
     """One gossip step + affinity d for all peers, via the fused kernel.
 
@@ -126,7 +130,7 @@ def consensus_mix_push_sum_stacked(
     beta: jax.Array,  # (K, D)
     local_steps: int,
     *,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> tuple[PyTree, PyTree, jax.Array]:
     """One push-sum step + affinity d for all peers, via the fused kernel.
 
@@ -208,7 +212,7 @@ def consensus_mix_schedule(
     beta_s: jax.Array,  # (R, K, D)
     local_steps: int,
     *,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> tuple[PyTree, PyTree]:
     """Schedule-aware gossip step: round ``round_idx`` of a time-varying graph.
 
@@ -232,7 +236,7 @@ def consensus_mix_push_sum_schedule(
     beta_s: jax.Array,  # (R, K, D)
     local_steps: int,
     *,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> tuple[PyTree, PyTree, jax.Array]:
     """Schedule-aware push-sum step: round ``round_idx`` of a (possibly
     directed) time-varying graph, selected inside the traced program."""

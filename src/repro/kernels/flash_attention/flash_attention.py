@@ -96,8 +96,11 @@ def flash_attention(
     scale: float | None = None,
     block_q: int = 128,
     block_k: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
+    from repro.kernels import lowering
+
+    interpret = lowering.resolve_interpret(interpret)
     b, h, s, d = q.shape
     scale = scale if scale is not None else d**-0.5
     block_q = min(block_q, s)

@@ -16,11 +16,16 @@ def gqa_flash_attention(
     causal: bool = True,
     window: int | None = None,
     impl: str = "pallas",
-    interpret: bool = True,
+    interpret: bool | None = None,
     block_q: int = 128,
     block_k: int = 128,
 ) -> jax.Array:
-    """Returns (B, S, H, D).  KV heads are expanded to Q heads (GQA)."""
+    """Returns (B, S, H, D).  KV heads are expanded to Q heads (GQA).
+
+    ``interpret=None`` lowers per platform (see repro.kernels.lowering):
+    interpret mode on CPU, compiled Pallas elsewhere — resolved once, inside
+    the kernel entry point it forwards to.
+    """
     b, s, h, d = q.shape
     kh = k.shape[2]
     assert h % kh == 0

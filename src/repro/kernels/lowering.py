@@ -1,0 +1,63 @@
+"""Platform-aware Pallas lowering policy, shared by every kernel family.
+
+Historically each kernel entry point hardcoded ``interpret: bool = True`` —
+correct on the CPU test environment (Pallas has no CPU backend, interpret mode
+is the only way to run there) but silently wrong on real accelerators, where
+interpret mode emulates the kernel at Python speed.  The single source of
+truth is now ``default_interpret()``:
+
+* backend ``cpu``   -> interpret=True  (the only mode that runs at all)
+* anything else     -> interpret=False (compile the kernel for the device)
+* ``REPRO_PALLAS_INTERPRET=1|0`` (also true/false/yes/no/on/off) overrides
+  both directions — e.g. force interpret mode on a TPU to debug a kernel, or
+  force compiled mode in a CPU-backed unit test that asserts lowering works.
+
+Kernel entry points take ``interpret: bool | None = None`` and resolve the
+``None`` through ``resolve_interpret`` — an explicit bool always wins.  Note
+that several entry points are jitted with ``interpret`` as a static argument:
+the environment variable is read when the ``None`` call signature first
+*traces*, so flipping it mid-process does not retrace already-compiled calls
+(pass ``interpret=`` explicitly for per-call control).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+ENV_VAR = "REPRO_PALLAS_INTERPRET"
+
+_TRUTHY = ("1", "true", "yes", "on")
+_FALSY = ("0", "false", "no", "off")
+
+
+def default_interpret(backend: str | None = None) -> bool:
+    """Whether Pallas kernels should lower in interpret mode on ``backend``.
+
+    ``backend`` defaults to ``jax.default_backend()``; the ``ENV_VAR``
+    environment variable overrides the platform rule in either direction.
+    """
+    env = os.environ.get(ENV_VAR, "").strip().lower()
+    if env in _TRUTHY:
+        return True
+    if env in _FALSY:
+        return False
+    if env:
+        raise ValueError(
+            f"{ENV_VAR}={os.environ[ENV_VAR]!r} is not a boolean; use one of "
+            f"{_TRUTHY + _FALSY} (or unset it for the platform default)"
+        )
+    if backend is None:
+        backend = jax.default_backend()
+    return backend == "cpu"
+
+
+def resolve_interpret(interpret: bool | None, backend: str | None = None) -> bool:
+    """Resolve a kernel entry point's ``interpret`` argument.
+
+    ``None`` (the default everywhere) means "platform decides" via
+    ``default_interpret``; an explicit bool is passed through untouched.
+    """
+    if interpret is None:
+        return default_interpret(backend)
+    return bool(interpret)

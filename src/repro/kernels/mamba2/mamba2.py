@@ -71,8 +71,11 @@ def ssd_chunked(
     a: jax.Array,  # (H,) negative per-head decay rate
     *,
     chunk: int = 64,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
+    from repro.kernels import lowering
+
+    interpret = lowering.resolve_interpret(interpret)
     bs, t, h, p = x.shape
     n = b.shape[3]
     chunk = min(chunk, t)

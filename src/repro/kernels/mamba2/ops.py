@@ -7,8 +7,11 @@ from repro.kernels.mamba2.mamba2 import ssd_chunked
 from repro.kernels.mamba2.ref import ssd_ref
 
 
-def ssd(x, b, c, dt, a, *, impl: str = "pallas", chunk: int = 64, interpret: bool = True):
-    """x (B,T,H,P), b/c (B,T,H,N), dt (B,T,H), a (H,) -> y (B,T,H,P)."""
+def ssd(x, b, c, dt, a, *, impl: str = "pallas", chunk: int = 64, interpret: bool | None = None):
+    """x (B,T,H,P), b/c (B,T,H,N), dt (B,T,H), a (H,) -> y (B,T,H,P).
+
+    ``interpret=None`` lowers per platform (repro.kernels.lowering),
+    resolved inside ``ssd_chunked``."""
     if impl == "pallas":
         return ssd_chunked(x, b, c, dt, a, chunk=chunk, interpret=interpret)
     y, _ = ssd_ref(x, b, c, dt, a)

@@ -16,9 +16,12 @@ def wkv6(
     *,
     impl: str = "pallas",
     chunk: int = 16,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
-    """(B, T, H, dk) x4 + u (H, dk) -> (B, T, H, dk)."""
+    """(B, T, H, dk) x4 + u (H, dk) -> (B, T, H, dk).
+
+    ``interpret=None`` lowers per platform (repro.kernels.lowering),
+    resolved inside ``wkv6_chunked``."""
     if impl == "pallas":
         return wkv6_chunked(r, k, v, logdecay, u, chunk=chunk, interpret=interpret)
     out, _ = wkv6_ref(r, k, v, logdecay, u)

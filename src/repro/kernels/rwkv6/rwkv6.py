@@ -74,8 +74,11 @@ def wkv6_chunked(
     u: jax.Array,  # (H, dk)
     *,
     chunk: int = 16,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
+    from repro.kernels import lowering
+
+    interpret = lowering.resolve_interpret(interpret)
     b, t, h, dk = r.shape
     chunk = min(chunk, t)
     assert t % chunk == 0, (t, chunk)

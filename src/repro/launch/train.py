@@ -60,13 +60,25 @@ def run_paper_experiment(
     seed: int = 0,
     verbose: bool = False,
     peer_axis: str = "vmap",
+    driver: str = "scan",
 ) -> metrics_lib.RoundLog:
     """``peer_axis``: "vmap" (stacked runtime, any device count) or "pod" (the
     sharded runtime: one device per peer, bit-identical results — see
-    "Running sharded locally" in repro/launch/mesh.py)."""
+    "Running sharded locally" in repro/launch/mesh.py).
+
+    ``driver``: "scan" (default) runs each eval period as ONE jitted
+    ``lax.scan`` chunk with the input state donated — one dispatch and at most
+    one host transfer per eval period; "python" dispatches the jitted round
+    fn once per round (the pre-scan driver, kept for debugging and as the
+    parity baseline — the two are fp32 bit-identical).  Both drivers evaluate
+    at the same cadence: after rounds ``eval_every, 2*eval_every, ...`` (the
+    end of each eval period).
+    """
     rounds = rounds or exp.rounds
     if peer_axis not in ("vmap", "pod"):
         raise ValueError(f"peer_axis must be 'vmap' or 'pod', got {peer_axis!r}")
+    if driver not in ("scan", "python"):
+        raise ValueError(f"driver must be 'scan' or 'python', got {driver!r}")
     if data is None:
         data = synthetic.mnist_like()
     x_tr, y_tr, x_te, y_te = data
@@ -78,13 +90,17 @@ def run_paper_experiment(
     # data_sizes seed both the mixing weights and the protocol state (for
     # push_sum: initial mass proportional to n_k -> data-weighted consensus).
     state = p2p.init_state(jax.random.PRNGKey(seed), mlp.init_2nn, cfg, data_sizes=sizes)
+    mesh = None
     if peer_axis == "pod":
         from repro.launch import mesh as mesh_lib
         from repro.sharding import specs as specs_lib
 
         mesh = mesh_lib.make_peer_mesh(cfg.num_peers)  # fails fast if short on devices
-        round_fn = p2p.make_sharded_round_fn(mlp.loss_2nn, cfg, mesh, data_sizes=sizes)
         state = specs_lib.shard_peer_tree(state, mesh)
+    if driver == "scan":
+        drive_fn = p2p.make_scan_driver(mlp.loss_2nn, cfg, data_sizes=sizes, mesh=mesh)
+    elif peer_axis == "pod":
+        round_fn = p2p.make_sharded_round_fn(mlp.loss_2nn, cfg, mesh, data_sizes=sizes)
     else:
         round_fn = p2p.make_round_fn(mlp.loss_2nn, cfg, data_sizes=sizes)
 
@@ -109,33 +125,58 @@ def run_paper_experiment(
     )
 
     log = metrics_lib.RoundLog()
-    for r in range(rounds):
-        bx, by = batcher.round_batches(cfg.local_steps)
-        after_local, after_cons, losses = round_fn(state, (jnp.asarray(bx), jnp.asarray(by)))
-        state = after_cons
-        if r % eval_every == 0:
-            params_l, params_c = after_local.params, after_cons.params
-            if peer_axis == "pod":
-                # evaluation runs on the default device: pull the peer-sharded
-                # params to host once per eval instead of per metric
-                params_l = jax.device_get(params_l)
-                params_c = jax.device_get(params_c)
-            acc_l = {k: np.asarray(v) for k, v in eval_fn(params_l).items()}
-            acc_c = {k: np.asarray(v) for k, v in eval_fn(params_c).items()}
-            log.record(
-                local_acc=acc_l,
-                consensus_acc=acc_c,
-                drift=float(consensus_lib.pairwise_drift(params_l)),
-                consensus_error=float(consensus_lib.consensus_error(params_c)),
-                train_loss=float(jnp.mean(losses)),
+
+    def record_eval(r, after_local, after_cons, round_losses):
+        """One eval: a SINGLE batched host transfer for both phase params."""
+        params_l, params_c = after_local.params, after_cons.params
+        if peer_axis == "pod":
+            # evaluation runs on the default device: pull BOTH phases'
+            # peer-sharded params in one batched transfer per eval period
+            params_l, params_c = jax.device_get((params_l, params_c))
+        acc_l = {k: np.asarray(v) for k, v in eval_fn(params_l).items()}
+        acc_c = {k: np.asarray(v) for k, v in eval_fn(params_c).items()}
+        loss = float(np.mean(round_losses))
+        log.record(
+            local_acc=acc_l,
+            consensus_acc=acc_c,
+            drift=float(consensus_lib.pairwise_drift(params_l)),
+            consensus_error=float(consensus_lib.consensus_error(params_c)),
+            train_loss=loss,
+        )
+        if verbose:
+            print(
+                f"round {r:3d} loss={loss:.4f} "
+                f"acc(after local)={acc_l['all'].mean():.3f} "
+                f"acc(after consensus)={acc_c['all'].mean():.3f}",
+                flush=True,
             )
-            if verbose:
-                print(
-                    f"round {r:3d} loss={float(jnp.mean(losses)):.4f} "
-                    f"acc(after local)={acc_l['all'].mean():.3f} "
-                    f"acc(after consensus)={acc_c['all'].mean():.3f}",
-                    flush=True,
-                )
+
+    if driver == "scan":
+        r = 0
+        while r < rounds:
+            n = min(eval_every, rounds - r)
+            bx, by = batcher.round_batches(cfg.local_steps * n)
+            # (n*T, K, ...) -> (n, T, K, ...): rounds-major chunk layout
+            bx = bx.reshape((n, cfg.local_steps) + bx.shape[1:])
+            by = by.reshape((n, cfg.local_steps) + by.shape[1:])
+            # the input state is DONATED to the scan: use only the returns
+            after_local, state, losses = drive_fn(
+                state, (jnp.asarray(bx), jnp.asarray(by))
+            )
+            r += n
+            # one eval (and at most one host transfer) per chunk, on the last
+            # round's phase-boundary states; losses[-1] is that round's (T,)
+            record_eval(r - 1, after_local, state, losses[-1])
+    else:
+        for r in range(rounds):
+            bx, by = batcher.round_batches(cfg.local_steps)
+            after_local, after_cons, losses = round_fn(
+                state, (jnp.asarray(bx), jnp.asarray(by))
+            )
+            state = after_cons
+            if (r + 1) % eval_every == 0 or r == rounds - 1:
+                # eval at period ends only: non-eval rounds transfer NOTHING
+                record_eval(r, after_local, after_cons, losses)
     return log
 
 
@@ -218,6 +259,16 @@ def main(argv=None):
                          "a real mesh, one device per peer — on CPU set "
                          "XLA_FLAGS=--xla_force_host_platform_device_count=K "
                          "before launch; results are bit-identical)")
+    ap.add_argument("--driver", default="scan", choices=["scan", "python"],
+                    help="round driver: 'scan' fuses each eval period into one "
+                         "jitted lax.scan chunk (donated state, one host "
+                         "transfer per period); 'python' dispatches one jitted "
+                         "round per loop iteration (debug/parity baseline)")
+    ap.add_argument("--eval-every", type=int, default=1,
+                    help="evaluate every N rounds (the end of each period); "
+                         "with --driver scan this is also the fused chunk "
+                         "size — N rounds per dispatch, so N > 1 is where "
+                         "the scan driver's amortization engages")
     ap.add_argument("--rounds", type=int, default=None)
     ap.add_argument("--topology", default="complete")
     ap.add_argument("--local-steps", type=int, default=10)
@@ -312,7 +363,8 @@ def main(argv=None):
             f"{exp.p2p.num_peers} set before the first jax import."
         )
     log = run_paper_experiment(
-        exp, rounds=args.rounds, verbose=True, peer_axis=args.peer_axis
+        exp, rounds=args.rounds, verbose=True, peer_axis=args.peer_axis,
+        driver=args.driver, eval_every=args.eval_every,
     )
     print(f"done in {time.time()-t0:.1f}s")
     if args.out:

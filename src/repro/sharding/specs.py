@@ -224,9 +224,34 @@ def peer_batch_pspecs(tree: PyTree, *, peer_axis="pod") -> PyTree:
     return jax.tree.map(one, tree)
 
 
+_PLACER_CACHE: dict = {}
+
+
 def shard_peer_tree(tree: PyTree, mesh, *, peer_axis="pod") -> PyTree:
-    """device_put a peer-stacked tree onto the mesh, K axis over ``peer_axis``."""
-    return jax.device_put(tree, to_named(mesh, peer_stacked_pspecs(tree, peer_axis=peer_axis)))
+    """Place a peer-stacked tree onto the mesh, K axis over ``peer_axis``.
+
+    Placement goes through a jitted ``with_sharding_constraint`` rather than a
+    bare ``device_put``: the arrays then record the same *normalized*
+    ``PartitionSpec`` forms that jit-computed outputs record (e.g.
+    ``P('pod')`` instead of ``P('pod', None, None)``).  Specs that differ only
+    in trailing ``None``s are semantically equal but hash differently in the
+    jit cache key, so a ``device_put``-placed state would force every round/
+    scan driver to compile TWICE per run — once for the hand-built input
+    shardings, once for its own outputs fed back in.  The jitted placer is
+    memoized on (mesh, axis, tree structure, leaf avals) so repeated
+    placements of same-shaped trees reuse one compiled copy program.
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    key = (
+        mesh, peer_axis, treedef,
+        tuple((np.shape(leaf), getattr(leaf, "dtype", None)) for leaf in leaves),
+    )
+    placer = _PLACER_CACHE.get(key)
+    if placer is None:
+        shardings = to_named(mesh, peer_stacked_pspecs(tree, peer_axis=peer_axis))
+        placer = jax.jit(lambda t: jax.lax.with_sharding_constraint(t, shardings))
+        _PLACER_CACHE[key] = placer
+    return placer(tree)
 
 
 def batch_pspecs(batch_shapes: PyTree, *, peer_axis=None) -> PyTree:

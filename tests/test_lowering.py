@@ -1,0 +1,111 @@
+"""Platform-aware Pallas lowering policy (repro.kernels.lowering).
+
+``default_interpret`` is the single source of truth for whether a kernel runs
+in interpret mode: CPU -> interpret (Pallas cannot compile there), real
+accelerators -> compiled, ``REPRO_PALLAS_INTERPRET`` overriding both ways.
+The grep-style test pins the policy structurally: no kernel entry point may
+grow a hardcoded ``interpret=True`` default again.
+"""
+import pathlib
+import re
+
+import jax
+import pytest
+
+from repro.kernels import lowering
+
+KERNELS_DIR = pathlib.Path(__file__).resolve().parents[1] / "src" / "repro" / "kernels"
+
+
+# ---------------------------------------------------------------------------
+# default_interpret: platform rule + env override
+# ---------------------------------------------------------------------------
+
+
+def test_platform_rule_cpu_interprets(monkeypatch):
+    monkeypatch.delenv(lowering.ENV_VAR, raising=False)
+    assert lowering.default_interpret(backend="cpu") is True
+    assert lowering.default_interpret(backend="tpu") is False
+    assert lowering.default_interpret(backend="gpu") is False
+
+
+def test_default_backend_is_used(monkeypatch):
+    monkeypatch.delenv(lowering.ENV_VAR, raising=False)
+    # the no-arg form must follow whatever jax's default backend is — on the
+    # CPU CI that means interpret=True; on a GPU/TPU dev box, False
+    assert lowering.default_interpret() is (jax.default_backend() == "cpu")
+
+
+@pytest.mark.parametrize("value", ["1", "true", "YES", "on"])
+def test_env_forces_interpret_on(monkeypatch, value):
+    """Override in the ON direction even where the platform says compile."""
+    monkeypatch.setenv(lowering.ENV_VAR, value)
+    assert lowering.default_interpret(backend="tpu") is True
+
+
+@pytest.mark.parametrize("value", ["0", "false", "No", "OFF"])
+def test_env_forces_interpret_off(monkeypatch, value):
+    """Override in the OFF direction even on CPU (e.g. asserting that a
+    lowering path at least builds)."""
+    monkeypatch.setenv(lowering.ENV_VAR, value)
+    assert lowering.default_interpret(backend="cpu") is False
+
+
+def test_env_garbage_raises(monkeypatch):
+    monkeypatch.setenv(lowering.ENV_VAR, "maybe")
+    with pytest.raises(ValueError, match=lowering.ENV_VAR):
+        lowering.default_interpret(backend="cpu")
+
+
+def test_resolve_explicit_beats_everything(monkeypatch):
+    monkeypatch.setenv(lowering.ENV_VAR, "1")
+    assert lowering.resolve_interpret(False, backend="cpu") is False
+    assert lowering.resolve_interpret(True, backend="tpu") is True
+    monkeypatch.delenv(lowering.ENV_VAR)
+    assert lowering.resolve_interpret(None, backend="cpu") is True
+    assert lowering.resolve_interpret(None, backend="tpu") is False
+
+
+# ---------------------------------------------------------------------------
+# Structural enforcement: every kernel routes through the policy
+# ---------------------------------------------------------------------------
+
+KERNEL_FAMILIES = ("consensus_mix", "flash_attention", "mamba2", "rwkv6")
+
+
+def test_no_hardcoded_interpret_defaults_anywhere_in_kernels():
+    """Grep-style gate: no ``interpret: bool = True``-shaped default (or
+    ``interpret=True`` keyword default) may appear in any kernel source —
+    the platform policy owns the default."""
+    # catches annotated (interpret: bool = True) AND bare (interpret=True)
+    # parameter defaults — and literal interpret=True call-site forwarding,
+    # which kernel code also must not hardcode
+    hardcoded = re.compile(r"interpret\s*(:[^=]+)?=\s*(True|False)")
+    offenders = []
+    for path in sorted(KERNELS_DIR.rglob("*.py")):
+        if path.name == "lowering.py":  # the policy module narrates the history
+            continue
+        for lineno, line in enumerate(path.read_text().splitlines(), start=1):
+            if hardcoded.search(line):
+                offenders.append(f"{path.relative_to(KERNELS_DIR)}:{lineno}: {line.strip()}")
+    assert not offenders, (
+        "hardcoded interpret defaults found (route through "
+        "repro.kernels.lowering instead):\n" + "\n".join(offenders)
+    )
+
+
+@pytest.mark.parametrize("family", KERNEL_FAMILIES)
+def test_every_ops_entry_point_routes_through_lowering(family):
+    """Each family's public ops.py (or the kernel module its entry point
+    forwards ``interpret=None`` to) must resolve via the lowering policy."""
+    ops = (KERNELS_DIR / family / "ops.py").read_text()
+    kernel_sources = "".join(
+        p.read_text() for p in sorted((KERNELS_DIR / family).glob("*.py"))
+    )
+    # every `interpret` default/assignment in the family is None, a pass-
+    # through, or the policy resolution itself — never a literal bool
+    for m in re.finditer(r"interpret\s*(?::[\w| ]+)?=\s*(\w+)", kernel_sources):
+        assert m.group(1) in ("None", "interpret", "lowering"), m.group(0)
+    # ...and the family actually consults the policy
+    assert "resolve_interpret" in kernel_sources, family
+    assert "interpret" in ops, family

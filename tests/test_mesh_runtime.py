@@ -135,6 +135,109 @@ def test_sharded_runtime_one_compile():
 
 @pytest.mark.mesh
 @needs_mesh
+@pytest.mark.parametrize("protocol", ["gossip", "push_sum"])
+@pytest.mark.parametrize("schedule,extra", [
+    ("static", {}),
+    ("round_robin", {"round_robin_topologies": ("ring", "star")}),
+], ids=["static", "round_robin"])
+def test_scan_driver_pod_bit_identical_to_python_loop_and_vmap(
+    protocol, schedule, extra
+):
+    """The scanned driver on the POD runtime: bit-identical to (a) the
+    python-loop pod driver and (b) the scanned VMAP driver, across two chunks
+    that cross the schedule period — the leaf-pipelined ppermute overlap must
+    not cost a single ulp."""
+    cfg = p2p.P2PConfig(
+        algorithm="p2pl_affinity", num_peers=K, local_steps=3,
+        consensus_steps=2, lr=0.1, momentum=0.3, eta_d=0.5, eta_b=0.1,
+        topology="ring", protocol=protocol, schedule=schedule,
+        schedule_rounds=5, **extra,
+    )
+    sizes = np.arange(1, K + 1)
+    chunk = 3
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        mesh = mesh_lib.make_peer_mesh(K)
+        pod_round = p2p.make_sharded_round_fn(_mlp_loss, cfg, mesh, data_sizes=sizes)
+        pod_drive = p2p.make_scan_driver(
+            _mlp_loss, cfg, data_sizes=sizes, mesh=mesh, donate=False
+        )
+        vmap_drive = p2p.make_scan_driver(_mlp_loss, cfg, data_sizes=sizes, donate=False)
+    state0 = p2p.init_state(jax.random.PRNGKey(0), _init_fn, cfg, data_sizes=sizes)
+    state0_pod = specs_lib.shard_peer_tree(state0, mesh)
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2, chunk, 3, K, 10, 6)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(2, chunk, 3, K, 10, 4)), jnp.float32)
+
+    s_py, al_py, losses_py = state0_pod, None, []
+    for c in range(2):
+        for r in range(chunk):
+            al_py, s_py, loss_r = pod_round(s_py, (x[c, r], y[c, r]))
+            losses_py.append(np.asarray(loss_r))
+    s_pod, al_pod, losses_pod = state0_pod, None, []
+    s_vmap, al_vmap, losses_vmap = state0, None, []
+    for c in range(2):
+        al_pod, s_pod, loss_c = pod_drive(s_pod, (x[c], y[c]))
+        losses_pod.append(np.asarray(loss_c))
+        al_vmap, s_vmap, loss_v = vmap_drive(s_vmap, (x[c], y[c]))
+        losses_vmap.append(np.asarray(loss_v))
+
+    for tag, want, got in [
+        ("pod python-loop vs pod scan",
+         (al_py, s_py, np.stack(losses_py)),
+         (al_pod, s_pod, np.concatenate(losses_pod))),
+        ("pod scan vs vmap scan",
+         (al_pod, s_pod, np.concatenate(losses_pod)),
+         (al_vmap, s_vmap, np.concatenate(losses_vmap))),
+    ]:
+        want_l = jax.tree_util.tree_leaves_with_path(want)
+        got_l = jax.tree_util.tree_leaves_with_path(got)
+        assert len(want_l) == len(got_l)
+        for (path, w), (_, g) in zip(want_l, got_l):
+            assert np.array_equal(np.asarray(w), np.asarray(g)), (
+                f"{protocol}/{schedule} {tag}: leaf "
+                f"{jax.tree_util.keystr(path)} diverged"
+            )
+
+
+@pytest.mark.mesh
+@needs_mesh
+def test_scan_driver_pod_one_compile_and_donation():
+    """One compile for a multi-chunk pod scan run + the donated input state
+    is consumed (its sharded buffers deleted)."""
+    traces = [0]
+
+    def counting_loss(params, batch):
+        traces[0] += 1
+        return _mlp_loss(params, batch)
+
+    cfg = p2p.P2PConfig(
+        algorithm="p2pl_affinity", num_peers=K, local_steps=2,
+        consensus_steps=1, lr=0.05, eta_d=0.5, topology="ring",
+        schedule="link_dropout", schedule_rounds=4,
+    )
+    mesh = mesh_lib.make_peer_mesh(K)
+    drive = p2p.make_scan_driver(counting_loss, cfg, mesh=mesh)
+    state = specs_lib.shard_peer_tree(
+        p2p.init_state(jax.random.PRNGKey(1), _init_fn, cfg), mesh
+    )
+    first_state = state
+    rng = np.random.default_rng(1)
+    chunk = 4
+    for _ in range(3):
+        x = jnp.asarray(rng.normal(size=(chunk, 2, K, 10, 6)), jnp.float32)
+        y = jnp.asarray(rng.normal(size=(chunk, 2, K, 10, 4)), jnp.float32)
+        _, state, losses = drive(state, (x, y))
+    assert int(state.round_idx) == 3 * chunk
+    assert np.isfinite(np.asarray(losses)).all()
+    assert traces[0] <= 2  # value + grad trace of the single compile
+    assert drive._cache_size() == 1  # the jit cache agrees
+    assert all(leaf.is_deleted() for leaf in jax.tree.leaves(first_state))
+
+
+@pytest.mark.mesh
+@needs_mesh
 def test_sharded_push_sum_mass_conservation():
     """The ppermute'd mass lane conserves sum_k y_k == K across rounds."""
     cfg = p2p.P2PConfig(
@@ -237,6 +340,77 @@ def test_train_cli_fails_fast_on_missing_devices(capsys):
     err = capsys.readouterr().err
     assert "xla_force_host_platform_device_count" in err
     assert "num_peers=2" in err
+
+
+class _LegacyGossip(protocols.ConsensusProtocol):
+    """A protocol written against the PRE-scan sharded interface: whole-tree
+    ``mix_sharded`` override, no ``mix_sharded_begin``/``mix_sharded_leaf``."""
+
+    name = "legacy_gossip_test"
+
+    def init_state(self, params, data_sizes=None):
+        return ()
+
+    def mix(self, proto_state, params, consts):
+        return proto_state, cl.mix_stacked(consts.w, params)
+
+    def mix_sharded(self, proto_state, params, params_full, w_mat, *, axis_name, lanes):
+        my = jax.lax.axis_index(axis_name)
+        w_row = jnp.take(w_mat, my, axis=0)[None]
+        return proto_state, cl.mix_stacked(w_row, params_full)
+
+
+def test_legacy_protocol_mix_sharded_fallback(rng):
+    """consensus_phase_sharded must route a begin/leaf-less protocol through
+    its whole-tree mix_sharded override (unpipelined fallback) instead of
+    hitting the base class's NotImplementedError or ignoring the override."""
+    if _LegacyGossip.name not in protocols.protocol_names():
+        protocols.register_protocol(_LegacyGossip())
+    k = 4
+    cfg = p2p.P2PConfig(
+        algorithm="p2pl_affinity", num_peers=k, local_steps=2,
+        consensus_steps=1, eta_d=0.5, topology="ring",
+        protocol=_LegacyGossip.name,
+    )
+    g = gl.build_graph("ring", k)
+    sched = gl.static_schedule(g)
+    w, beta = gl.schedule_matrices(sched, "metropolis")
+    lanes = gl.schedule_lanes(sched)
+    consts = protocols.ProtocolConstants(
+        jnp.asarray(w[0], jnp.float32), jnp.asarray(beta[0], jnp.float32)
+    )
+    params = {"w": jnp.asarray(rng.normal(size=(k, 5)), jnp.float32)}
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    state = p2p.P2PState(
+        params=params, momentum=zeros, d_bias=zeros, b_bias=zeros,
+        round_idx=jnp.zeros((), jnp.int32), protocol=(),
+    )
+
+    blocked = p2p.P2PState(
+        params=jax.tree.map(lambda x: x[:, None], params),
+        momentum=jax.tree.map(lambda x: x[:, None], zeros),
+        d_bias=jax.tree.map(lambda x: x[:, None], zeros),
+        b_bias=jax.tree.map(lambda x: x[:, None], zeros),
+        round_idx=state.round_idx, protocol=(),
+    )
+    axes = p2p.P2PState(
+        params=0, momentum=0, d_bias=0, b_bias=0, round_idx=None, protocol=None
+    )
+
+    def per_peer(block):
+        out = p2p.consensus_phase_sharded(
+            block, cfg, consts, axis_name="peer", lanes=lanes
+        )
+        return jax.tree.map(lambda x: x[0], (out.params, out.d_bias))
+
+    got_params, got_d = jax.vmap(per_peer, in_axes=(axes,), axis_name="peer")(blocked)
+    want = p2p.consensus_phase(state, cfg, consts)
+    np.testing.assert_allclose(
+        np.asarray(got_params["w"]), np.asarray(want.params["w"]), atol=1e-6
+    )
+    np.testing.assert_allclose(
+        np.asarray(got_d["w"]), np.asarray(want.d_bias["w"]), atol=1e-6
+    )
 
 
 def test_gossip_mix_sharded_under_vmap_axis(rng):

@@ -1,0 +1,163 @@
+"""The scanned multi-round driver (``p2p.make_scan_driver``).
+
+Contract under test (the acceptance criteria of the fused round loop):
+
+* **Parity** — leaf-for-leaf fp32 BIT-identity (``np.array_equal``) with the
+  python-loop driver for both protocols on static + round_robin schedules:
+  final state, last after-local state, and the stacked per-round losses.
+* **One compile** — a chunked run of many rounds traces the loss exactly once
+  (value+grad share the trace), however many chunks are driven.
+* **Donation** — ``donate_argnums`` consumes the input ``P2PState``: its
+  buffers are deleted after the call (reused in place for the output state).
+
+The vmap-runtime cases run everywhere (tier-1); the pod-runtime parity lives
+in tests/test_mesh_runtime.py under the ``mesh`` marker.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import p2p
+
+K = 4
+T = 3
+CHUNK = 3
+
+
+def _init_fn(key):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": jax.random.normal(k1, (6, 16)),
+        "b1": jnp.zeros((16,)),
+        "w2": jax.random.normal(k2, (16, 4)),
+    }
+
+
+def _mlp_loss(p, batch):
+    x, y = batch
+    h = jnp.tanh(x @ p["w1"] + p["b1"])
+    return jnp.mean(jnp.sum(jnp.square(h @ p["w2"] - y), axis=-1))
+
+
+def _cfg(protocol: str, schedule: str) -> p2p.P2PConfig:
+    extra = {}
+    if schedule == "round_robin":
+        extra["round_robin_topologies"] = ("ring", "star")
+    return p2p.P2PConfig(
+        algorithm="p2pl_affinity", num_peers=K, local_steps=T,
+        consensus_steps=2, lr=0.1, momentum=0.3, eta_d=0.5, eta_b=0.1,
+        topology="ring", protocol=protocol, schedule=schedule,
+        schedule_rounds=2, **extra,
+    )
+
+
+def _chunk_batches(rng, chunks: int):
+    x = jnp.asarray(rng.normal(size=(chunks, CHUNK, T, K, 10, 6)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(chunks, CHUNK, T, K, 10, 4)), jnp.float32)
+    return x, y
+
+
+def _assert_trees_equal(want, got, context: str):
+    want_leaves = jax.tree_util.tree_leaves_with_path(want)
+    got_leaves = jax.tree_util.tree_leaves_with_path(got)
+    assert len(want_leaves) == len(got_leaves)
+    for (path, w), (_, g) in zip(want_leaves, got_leaves):
+        assert np.array_equal(np.asarray(w), np.asarray(g)), (
+            f"{context} leaf {jax.tree_util.keystr(path)} diverged: "
+            f"max |diff| = "
+            f"{np.abs(np.asarray(w, np.float64) - np.asarray(g, np.float64)).max():.3e}"
+        )
+
+
+@pytest.mark.parametrize("protocol", ["gossip", "push_sum"])
+@pytest.mark.parametrize("schedule", ["static", "round_robin"])
+def test_scan_driver_bit_identical_to_python_loop(protocol, schedule):
+    """Two scan chunks (crossing the schedule period) == 2*CHUNK python-loop
+    rounds, bit for bit on every leaf, losses included."""
+    cfg = _cfg(protocol, schedule)
+    sizes = np.arange(1, K + 1)
+    state0 = p2p.init_state(jax.random.PRNGKey(0), _init_fn, cfg, data_sizes=sizes)
+    round_fn = p2p.make_round_fn(_mlp_loss, cfg, data_sizes=sizes)
+    drive_fn = p2p.make_scan_driver(_mlp_loss, cfg, data_sizes=sizes, donate=False)
+
+    x, y = _chunk_batches(np.random.default_rng(0), chunks=2)
+    s_py, losses_py, al_py = state0, [], None
+    for c in range(2):
+        for r in range(CHUNK):
+            al_py, s_py, loss_r = round_fn(s_py, (x[c, r], y[c, r]))
+            losses_py.append(np.asarray(loss_r))
+
+    s_scan, al_scan, losses_scan = state0, None, []
+    for c in range(2):
+        al_scan, s_scan, loss_c = drive_fn(s_scan, (x[c], y[c]))
+        losses_scan.append(np.asarray(loss_c))
+
+    _assert_trees_equal(s_py, s_scan, f"{protocol}/{schedule} final state")
+    _assert_trees_equal(al_py, al_scan, f"{protocol}/{schedule} after_local")
+    assert np.array_equal(np.stack(losses_py), np.concatenate(losses_scan))
+    assert int(s_scan.round_idx) == 2 * CHUNK
+
+
+def test_scan_driver_compiles_once():
+    """Many chunks of a time-varying schedule: the loss traces once (value and
+    grad share one forward), i.e. ONE compile covers the whole run."""
+    traces = [0]
+
+    def counting_loss(params, batch):
+        traces[0] += 1
+        return _mlp_loss(params, batch)
+
+    cfg = _cfg("gossip", "round_robin")
+    state = p2p.init_state(jax.random.PRNGKey(1), _init_fn, cfg)
+    drive_fn = p2p.make_scan_driver(counting_loss, cfg)
+    x, y = _chunk_batches(np.random.default_rng(1), chunks=4)
+    for c in range(4):
+        _, state, losses = drive_fn(state, (x[c], y[c]))
+    assert int(state.round_idx) == 4 * CHUNK
+    assert np.isfinite(np.asarray(losses)).all()
+    assert traces[0] <= 2  # value + grad trace of the single compile
+    # the jit cache agrees: ONE entry serves the whole run
+    assert drive_fn._cache_size() == 1
+
+
+def test_scan_driver_donates_input_state():
+    """donate_argnums on the input P2PState: the caller's buffers are consumed
+    (reused in place), so touching the donated input must fail."""
+    cfg = _cfg("push_sum", "static")
+    state = p2p.init_state(jax.random.PRNGKey(2), _init_fn, cfg)
+    drive_fn = p2p.make_scan_driver(_mlp_loss, cfg)
+    x, y = _chunk_batches(np.random.default_rng(2), chunks=1)
+    _, final, _ = drive_fn(state, (x[0], y[0]))
+    deleted = [leaf.is_deleted() for leaf in jax.tree.leaves(state)]
+    assert all(deleted), (
+        f"{deleted.count(False)}/{len(deleted)} input-state buffers survived "
+        "the donated call"
+    )
+    # ... and the returned state is usable in the donated slot's place
+    _, final2, _ = drive_fn(final, (x[0], y[0]))
+    assert int(final2.round_idx) == 2 * CHUNK
+
+
+def test_scan_driver_donation_opt_out():
+    """donate=False keeps the input alive (the parity tests rely on it)."""
+    cfg = _cfg("gossip", "static")
+    state = p2p.init_state(jax.random.PRNGKey(3), _init_fn, cfg)
+    drive_fn = p2p.make_scan_driver(_mlp_loss, cfg, donate=False)
+    x, y = _chunk_batches(np.random.default_rng(3), chunks=1)
+    drive_fn(state, (x[0], y[0]))
+    assert not any(leaf.is_deleted() for leaf in jax.tree.leaves(state))
+
+
+def test_scan_driver_losses_shape_and_metrics():
+    """The stacked (C, T) losses are the driver's per-round metric surface:
+    one device_get per chunk replaces two per round."""
+    cfg = _cfg("gossip", "static")
+    state = p2p.init_state(jax.random.PRNGKey(4), _init_fn, cfg)
+    drive_fn = p2p.make_scan_driver(_mlp_loss, cfg)
+    x, y = _chunk_batches(np.random.default_rng(4), chunks=1)
+    after_local, final, losses = drive_fn(state, (x[0], y[0]))
+    assert losses.shape == (CHUNK, T)
+    # after_local is the LAST round's post-local-phase state: one local phase
+    # ahead of the final (post-consensus) state's round counter
+    assert int(final.round_idx) - int(after_local.round_idx) == 1

@@ -77,9 +77,10 @@ def test_cli_round_robin_and_protocol_flags(data, capsys, monkeypatch):
 
     monkeypatch.setattr(
         train_mod, "run_paper_experiment",
-        lambda exp, rounds=None, verbose=False, peer_axis="vmap": run_paper_experiment(
-            exp, rounds=1, data=data, peer_axis=peer_axis
-        ),
+        # `data` binds the module fixture (main() never passes it): the CLI
+        # test must run on the small dataset, not the 60k default
+        lambda exp, rounds=None, **kw:
+        run_paper_experiment(exp, rounds=1, data=data, **kw),
     )
     train_mod.main([
         "--experiment", "timevarying_k2", "--schedule", "round_robin",
