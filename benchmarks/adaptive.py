@@ -1,0 +1,84 @@
+"""The state-dependent topology axis: adaptive loss-driven partner selection.
+
+Onoszko et al. (2107.08517) select gossip partners by training-loss proximity;
+the repo's ``schedule="adaptive"`` runs that selection ON DEVICE inside the
+one jitted round function.  This benchmark trains the non-IID
+``timevarying_k8``-class workload (8 peers, 2 classes each) under each partner
+rule and the static baselines, and measures what the paper cares about:
+
+    adaptive_{variant}_osc            us col = wall-clock us/round,
+                                      derived = post-consensus oscillation
+                                      amplitude (mean |acc_cons - acc_local|)
+    adaptive_{variant}_consensus_err  derived = mean consensus error
+    adaptive_{variant}_final_acc      derived = final all-class accuracy
+
+plus the CI-gated *damping booleans* — the claim the adaptive subsystem
+exists to deliver:
+
+    adaptive_lossprox_damps_vs_random   us col = oscillation ratio
+                                        (random / loss_proximity),
+                                        derived = 1.0 iff loss-proximity
+                                        oscillates LESS than random matching
+    adaptive_eps_greedy_damps_vs_random same for the eps-greedy rule
+
+Loss-proximal peers tend to hold similar data, so averaging with them costs
+less local progress: the sawtooth shrinks.  (Consensus error moves the other
+way — proximity pairing mixes within loss clusters first — which is why the
+booleans gate oscillation, not error.)  All runs are seeded and deterministic;
+``benchmarks/compare.py`` gates every ``derived`` against the committed
+``BENCH_adaptive.json``.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.configs.p2pl_mnist import timevarying_k8
+from repro.data import synthetic
+from repro.launch.train import run_paper_experiment
+
+# (variant label, schedule, partner_rule) — adaptive rules vs the static
+# matched-communication baselines (same one-partner-per-round budget)
+VARIANTS = (
+    ("lossprox", "adaptive", "loss_proximity"),
+    ("eps_greedy", "adaptive", "eps_greedy"),
+    ("random", "adaptive", "random"),
+    ("static_matching", "random_matching", "loss_proximity"),
+    ("round_robin", "round_robin", "loss_proximity"),
+)
+
+
+def adaptive(full=False):
+    """Oscillation/consensus-error grid: adaptive rules vs static schedules."""
+    rounds = 40 if full else 16
+    data = synthetic.mnist_like(20000 if full else 6000, 5000 if full else 1500)
+    out = []
+    osc = {}
+    for name, schedule, rule in VARIANTS:
+        exp = timevarying_k8(schedule, "p2pl_affinity", 10, partner_rule=rule)
+        t0 = time.time()
+        log = run_paper_experiment(exp, rounds=rounds, data=data)
+        us = (time.time() - t0) / rounds * 1e6
+        osc[name] = log.mean_oscillation("all")
+        out.append((f"adaptive_{name}_osc", us, osc[name]))
+        out.append((
+            f"adaptive_{name}_consensus_err", us,
+            float(np.mean(log.consensus_error)),
+        ))
+        out.append((f"adaptive_{name}_final_acc", us, log.final_accuracy("all")))
+    # the CI-gated claim: loss-driven selection damps the sawtooth relative to
+    # random matching at IDENTICAL communication cost (both are one-partner
+    # matchings; only who gets matched differs)
+    for name in ("lossprox", "eps_greedy"):
+        out.append((
+            f"adaptive_{name}_damps_vs_random",
+            osc["random"] / osc[name],  # us col carries the damping ratio
+            1.0 if osc[name] < osc["random"] else 0.0,
+        ))
+    return out
+
+
+ALL_ADAPTIVE = {
+    "adaptive": adaptive,
+}

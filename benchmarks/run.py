@@ -1,9 +1,12 @@
 """Benchmark orchestrator.  One function per paper figure + kernel micro-
 benches.  Prints ``name,us_per_call,derived`` CSV (see figures.py/kernels.py)
-and serializes the consensus-protocol rows to ``BENCH_protocols.json`` and the
-round-loop driver rows to ``BENCH_roundloop.json`` so the perf trajectories
-(spectral gap, consensus error, wall-clock per round, scan-vs-python speedup)
-accumulate across PRs.  See benchmarks/README.md for the file contract.
+and serializes the consensus-protocol rows to ``BENCH_protocols.json``, the
+round-loop driver rows to ``BENCH_roundloop.json``, and the adaptive
+partner-selection rows to ``BENCH_adaptive.json`` so the perf trajectories
+(spectral gap, consensus error, wall-clock per round, scan-vs-python speedup,
+oscillation damping) accumulate across PRs.  See benchmarks/README.md for the
+file contract.  ``--only`` with an unknown name errors out listing the
+registry (a typo used to silently run nothing).
 
     PYTHONPATH=src python -m benchmarks.run              # reduced (CI) scale
     PYTHONPATH=src python -m benchmarks.run --full       # paper scale
@@ -37,8 +40,12 @@ def main(argv=None) -> None:
     ap.add_argument("--roundloop-json-out", default="BENCH_roundloop.json",
                     help="where to write the round-loop driver benchmark rows "
                          "('' disables)")
+    ap.add_argument("--adaptive-json-out", default="BENCH_adaptive.json",
+                    help="where to write the adaptive partner-selection "
+                         "benchmark rows ('' disables)")
     args = ap.parse_args(argv)
 
+    from benchmarks.adaptive import ALL_ADAPTIVE
     from benchmarks.figures import ALL_FIGURES
     from benchmarks.kernels import ALL_KERNELS
     from benchmarks.peer_axis import ALL_PEER_AXIS
@@ -46,13 +53,24 @@ def main(argv=None) -> None:
     from benchmarks.roundloop import ALL_ROUNDLOOP
     from benchmarks.schedules import ALL_SCHEDULES
 
+    benches = {**ALL_KERNELS, **ALL_FIGURES, **ALL_SCHEDULES, **ALL_PROTOCOLS,
+               **ALL_PEER_AXIS, **ALL_ROUNDLOOP, **ALL_ADAPTIVE}
     only = set(args.only.split(",")) if args.only else None
+    if only:
+        # a typo'd --only used to silently run NOTHING (and exit 0) — fail
+        # loudly with the registry instead
+        unknown = sorted(only - set(benches))
+        if unknown:
+            ap.error(
+                f"unknown benchmark name(s) {', '.join(unknown)}; "
+                f"known: {', '.join(sorted(benches))}"
+            )
     failures = 0
     protocol_rows = []
     roundloop_rows = []
+    adaptive_rows = []
     print("name,us_per_call,derived")
-    for name, fn in {**ALL_KERNELS, **ALL_FIGURES, **ALL_SCHEDULES,
-                     **ALL_PROTOCOLS, **ALL_PEER_AXIS, **ALL_ROUNDLOOP}.items():
+    for name, fn in benches.items():
         if only and name not in only:
             continue
         try:
@@ -67,6 +85,8 @@ def main(argv=None) -> None:
                 protocol_rows += rows
             if name in ALL_ROUNDLOOP:
                 roundloop_rows += rows
+            if name in ALL_ADAPTIVE:
+                adaptive_rows += rows
         except Exception:  # noqa: BLE001
             failures += 1
             print(f"{name},ERROR,0", flush=True)
@@ -82,6 +102,8 @@ def main(argv=None) -> None:
                   "--xla_force_host_platform_device_count=8)", file=sys.stderr)
         else:
             _write_rows(args.roundloop_json_out, roundloop_rows, "roundloop")
+    if args.adaptive_json_out:
+        _write_rows(args.adaptive_json_out, adaptive_rows, "adaptive")
     if failures:
         sys.exit(1)
 

@@ -50,6 +50,9 @@ def timevarying_k2(
     schedule_seed: int = 0,
     protocol: str = "gossip",
     round_robin_topologies: tuple = ("complete", "disconnected"),
+    partner_rule: str = "loss_proximity",
+    adaptive_eps: float = 0.1,
+    adaptive_seed: int = 0,
 ) -> PaperExperiment:
     """Beyond-paper: the K=2 non-IID workload over a churning link.
 
@@ -77,6 +80,9 @@ def timevarying_k2(
             schedule_seed=schedule_seed,
             protocol=protocol,
             round_robin_topologies=round_robin_topologies,
+            partner_rule=partner_rule,
+            adaptive_eps=adaptive_eps,
+            adaptive_seed=adaptive_seed,
         ),
         batch_size=10,
         samples_per_class=50,
@@ -96,10 +102,14 @@ def timevarying_k8(
     schedule_seed: int = 0,
     protocol: str = "gossip",
     round_robin_topologies: tuple = ("ring", "star"),
+    partner_rule: str = "loss_proximity",
+    adaptive_eps: float = 0.1,
+    adaptive_seed: int = 0,
 ) -> PaperExperiment:
     """Beyond-paper: 8 peers, 2 classes each, gossiping over a time-varying
-    graph (pairwise random matchings, dropped links, or peer churn on a
-    ring)."""
+    graph (pairwise random matchings, dropped links, peer churn on a ring —
+    or ``schedule="adaptive"``: pairwise matchings selected on device each
+    round from the peers' own training losses)."""
     peer_classes = tuple(((2 * k) % 10, (2 * k + 1) % 10) for k in range(8))
     return PaperExperiment(
         name=f"timevarying_k8_{schedule}_{algorithm}_T{local_steps}",
@@ -120,6 +130,9 @@ def timevarying_k8(
             schedule_seed=schedule_seed,
             protocol=protocol,
             round_robin_topologies=round_robin_topologies,
+            partner_rule=partner_rule,
+            adaptive_eps=adaptive_eps,
+            adaptive_seed=adaptive_seed,
         ),
         batch_size=10,
         samples_per_class=50,
@@ -137,6 +150,9 @@ def directed_k8(
     schedule_rounds: int = 16,
     link_survival_prob: float = 0.7,
     schedule_seed: int = 0,
+    partner_rule: str = "loss_proximity",
+    adaptive_eps: float = 0.1,
+    adaptive_seed: int = 0,
 ) -> PaperExperiment:
     """Beyond-paper: 8 non-IID peers on a DIRECTED ring — each peer only
     pushes forward (Sparse-Push-style one-way links).
@@ -178,6 +194,9 @@ def directed_k8(
             link_survival_prob=link_survival_prob,
             schedule_seed=schedule_seed,
             protocol=protocol,
+            partner_rule=partner_rule,
+            adaptive_eps=adaptive_eps,
+            adaptive_seed=adaptive_seed,
         ),
         batch_size=10,
         samples_per_class=50,
@@ -197,6 +216,9 @@ def sharded_k8(
     link_survival_prob: float = 0.7,
     schedule_seed: int = 0,
     round_robin_topologies: tuple = ("ring", "star"),
+    partner_rule: str = "loss_proximity",
+    adaptive_eps: float = 0.1,
+    adaptive_seed: int = 0,
 ) -> PaperExperiment:
     """The sharded peer-axis runtime's demo workload: 8 non-IID peers sized to
     CI's 8 forced host devices (``--peer-axis pod``).
@@ -228,6 +250,9 @@ def sharded_k8(
             schedule_seed=schedule_seed,
             protocol=protocol,
             round_robin_topologies=round_robin_topologies,
+            partner_rule=partner_rule,
+            adaptive_eps=adaptive_eps,
+            adaptive_seed=adaptive_seed,
         ),
         batch_size=10,
         samples_per_class=50,

@@ -16,12 +16,41 @@ receiving, the Sparse-Push setting.  Directed rounds need *column*-stochastic
 weights (``column_stochastic_matrix``) consumed by the push-sum consensus
 protocol (see repro/core/protocols.py); row-stochastic gossip on a directed
 graph would silently bias the consensus point.
+
+State-dependent (adaptive) schedules
+------------------------------------
+Everything above is *pretraced*: a ``GraphSchedule`` is a host-built, periodic
+stack of graphs chosen before the first round, and the jitted runtime merely
+indexes it with ``round_idx % R``.  The adaptive family at the bottom of this
+module breaks that assumption: ``adaptive_round_matrices`` builds one round's
+W/Beta **on device, inside the traced program**, from run state — the K-vector
+of per-peer recent training losses plus a PRNG key threaded through
+``P2PState`` (see ``repro.core.p2p.AdaptiveState``).  Partner selection is a
+greedy minimum-score perfect matching (``greedy_matching``) over one of three
+score rules (``ADAPTIVE_RULES``):
+
+    loss_proximity — score[i, j] = |loss_i - loss_j|: peers gossip with the
+                     peer whose training loss is closest (Onoszko et al.,
+                     2107.08517 — loss-proximal peers tend to hold similar
+                     data, so averaging with them costs less local progress);
+    random         — symmetric uniform scores: the random-matching baseline,
+                     re-sampled from the threaded key every round;
+    eps_greedy     — with probability eps the round explores (random scores),
+                     otherwise it exploits loss proximity.  The coin is per
+                     round, not per peer, so the matching stays a matching.
+
+The resulting matchings are symmetric (partner[partner[k]] == k), every
+matrix builder guarantees exact row- (gossip) or column- (push_sum)
+stochasticity on device, and nothing here leaves the trace: one compile
+covers an entire adaptive run with no host callback.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Sequence
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 TOPOLOGIES = (
@@ -633,6 +662,153 @@ def schedule_matrices(
         [affinity_matrix(g, data_sizes=data_sizes) for g in schedule.graphs]
     )
     return w, beta
+
+
+# ---------------------------------------------------------------------------
+# Adaptive (state-dependent) partner selection — on-device, traceable
+# ---------------------------------------------------------------------------
+
+ADAPTIVE_RULES = ("loss_proximity", "random", "eps_greedy")
+
+_MATCH_INF = jnp.float32(1e30)  # sentinel: masked (used-up) score entries
+
+
+def partner_scores(
+    losses: jax.Array,  # (K,) per-peer recent training losses
+    key: jax.Array,  # PRNG key (uint32 (2,)) for this round's randomness
+    rule: str = "loss_proximity",
+    eps: float = 0.1,
+) -> jax.Array:
+    """Symmetric (K, K) pairing scores — LOWER is a more desirable partner.
+
+    Traceable: ``rule``/``eps`` are trace-time constants, ``losses``/``key``
+    are run state.  See module docstring for the three rules.
+    """
+    if rule not in ADAPTIVE_RULES:
+        raise ValueError(f"unknown partner rule {rule!r}; one of {ADAPTIVE_RULES}")
+    k = losses.shape[0]
+    lf = losses.astype(jnp.float32)
+    loss_s = jnp.abs(lf[:, None] - lf[None, :])
+    if rule == "loss_proximity":
+        return loss_s
+    key_coin, key_scores = jax.random.split(key)
+    u = jax.random.uniform(key_scores, (k, k), jnp.float32)
+    rand_s = 0.5 * (u + u.T)  # symmetric, still uniform enough for ordering
+    if rule == "random":
+        return rand_s
+    explore = jax.random.bernoulli(key_coin, eps)
+    return jnp.where(explore, rand_s, loss_s)
+
+
+def greedy_matching(scores: jax.Array) -> jax.Array:
+    """Greedy minimum-score perfect matching over a symmetric (K, K) score
+    matrix; returns ``partner`` (K,) int32 with ``partner[k] == k`` for an
+    unmatched peer (odd K leaves exactly one).
+
+    ``K // 2`` fixed-shape iterations of "take the global argmin pair, then
+    mask both peers" — on the complete candidate graph every iteration finds a
+    valid pair, so even K always yields a perfect matching.  Ties break
+    deterministically (first flat index), keeping the selection bit-stable
+    across the vmap and pod runtimes.
+    """
+    k = scores.shape[0]
+    s0 = jnp.where(
+        jnp.eye(k, dtype=bool), _MATCH_INF, scores.astype(jnp.float32)
+    )
+    partner0 = jnp.arange(k, dtype=jnp.int32)
+
+    def body(_, carry):
+        s, partner = carry
+        flat = jnp.argmin(s)
+        i = (flat // k).astype(jnp.int32)
+        j = (flat % k).astype(jnp.int32)
+        ok = s.reshape(-1)[flat] < _MATCH_INF  # all-masked => no pairs left
+        paired = partner.at[i].set(j).at[j].set(i)
+        partner = jnp.where(ok, paired, partner)
+        used = (partner0 == i) | (partner0 == j)
+        masked = jnp.where(used[:, None] | used[None, :], _MATCH_INF, s)
+        s = jnp.where(ok, masked, s)
+        return s, partner
+
+    _, partner = jax.lax.fori_loop(0, k // 2, body, (s0, partner0))
+    return partner
+
+
+def matching_matrices(
+    partner: jax.Array,  # (K,) int32, symmetric (partner[partner[k]] == k)
+    *,
+    data_sizes: jax.Array | None = None,
+    consensus_step_size: float | jax.Array = 1.0,
+    stochasticity: str = "row",
+) -> tuple[jax.Array, jax.Array]:
+    """On-device (W, Beta) for a pairwise matching round, dtype f32.
+
+    Row form (gossip): W[k, p] = n_p / (n_k + n_p) for p = partner[k], the
+    data-weighted rule of ``mixing_matrix`` restricted to degree <= 1; rows
+    sum to exactly 1 by construction (the diagonal carries the remainder).
+    Column form (push_sum): A[p, k] = n_p / (n_k + n_p) — sender k splits its
+    mass between itself and its partner; columns sum to exactly 1.  On a
+    symmetric matching A == W.T.  Beta is the affinity row: one-hot at the
+    partner, all-zero for an unmatched peer (its d bias stays 0).
+
+    ``consensus_step_size`` is the paper's epsilon: W_eps = (1 - eps) I +
+    eps W applied row-wise (column-wise for the column form) — both remain
+    exactly stochastic.
+    """
+    if stochasticity not in ("row", "column"):
+        raise ValueError(
+            f"unknown stochasticity {stochasticity!r}; 'row' or 'column'"
+        )
+    k = partner.shape[0]
+    idx = jnp.arange(k, dtype=jnp.int32)
+    n = (
+        jnp.ones((k,), jnp.float32)
+        if data_sizes is None
+        else jnp.asarray(data_sizes, jnp.float32)
+    )
+    matched = partner != idx
+    adj = (partner[:, None] == idx[None, :]) & matched[:, None]  # (K, K) bool
+    denom = n[:, None] + n[None, :]
+    beta = jnp.where(adj, 1.0, 0.0).astype(jnp.float32)
+    eps = jnp.broadcast_to(
+        jnp.asarray(consensus_step_size, jnp.float32), (k,)
+    )
+    eye = jnp.eye(k, dtype=jnp.float32)
+    if stochasticity == "row":
+        off = jnp.where(adj, n[None, :] / denom, 0.0)  # W[k, p] = n_p/(n_k+n_p)
+        w = off + jnp.diag(1.0 - jnp.sum(off, axis=1))
+        w = (1.0 - eps)[:, None] * eye + eps[:, None] * w
+    else:
+        off = jnp.where(adj, n[:, None] / denom, 0.0)  # A[p, k] = n_p/(n_k+n_p)
+        w = off + jnp.diag(1.0 - jnp.sum(off, axis=0))
+        w = (1.0 - eps)[None, :] * eye + eps[None, :] * w
+    return w.astype(jnp.float32), beta
+
+
+def adaptive_round_matrices(
+    losses: jax.Array,  # (K,) per-peer recent training losses
+    key: jax.Array,  # PRNG key for this round
+    *,
+    rule: str = "loss_proximity",
+    eps: float = 0.1,
+    data_sizes: jax.Array | None = None,
+    consensus_step_size: float | jax.Array = 1.0,
+    stochasticity: str = "row",
+) -> tuple[jax.Array, jax.Array]:
+    """One adaptive round's (W, Beta), computed entirely inside the trace.
+
+    The composition the jitted round step calls: score -> greedy matching ->
+    exactly-stochastic matrices.  No host callback, no recompile — the
+    state-dependent topology subsystem's device-side entry point.
+    """
+    scores = partner_scores(losses, key, rule, eps)
+    partner = greedy_matching(scores)
+    return matching_matrices(
+        partner,
+        data_sizes=data_sizes,
+        consensus_step_size=consensus_step_size,
+        stochasticity=stochasticity,
+    )
 
 
 def spectral_gap(w: np.ndarray) -> float:

@@ -42,6 +42,14 @@ pre-protocol runtime); ``push_sum`` carries a per-peer scalar mass in
 push-sum so *directed* and churning ``GraphSchedule``s average correctly.
 Either way every round indexes the protocol's stacked (R, K, K) constants
 with ``round_idx % R`` inside one jitted program.
+
+Topologies themselves may be *state-dependent* (``cfg.schedule ==
+"adaptive"``): instead of indexing a pretraced stack, the round step computes
+its (K, K) W/Beta on device from the previous round's per-peer losses and a
+PRNG key carried in ``P2PState.adaptive`` (an ``AdaptiveState``) via
+``graph.adaptive_round_matrices`` — loss-proximity / random / eps-greedy
+partner matching à la Onoszko et al., preserving the one-compile property in
+all four {vmap, pod} x {python, scan} driver cells.
 """
 from __future__ import annotations
 
@@ -83,12 +91,16 @@ class P2PConfig:
     graph_seed: int = 0
     protocol: str = "gossip"  # one of protocols_lib.protocol_names()
     # -- time-varying communication (GraphSchedule) -------------------------
-    schedule: str = "static"  # one of graph_lib.SCHEDULES
+    schedule: str = "static"  # one of graph_lib.SCHEDULES, or "adaptive"
     schedule_rounds: int = 16  # period R of a stochastic schedule (cycled)
     link_survival_prob: float = 0.8  # q for schedule="link_dropout"
     peer_online_prob: float = 0.8  # for schedule="peer_churn"
     schedule_seed: int = 0
     round_robin_topologies: tuple[str, ...] = ()  # named topologies for "round_robin"
+    # -- adaptive (state-dependent) partner selection, schedule="adaptive" --
+    partner_rule: str = "loss_proximity"  # one of graph_lib.ADAPTIVE_RULES
+    adaptive_eps: float = 0.1  # exploration probability for "eps_greedy"
+    adaptive_seed: int = 0  # seeds the PRNG key threaded through P2PState
 
     def __post_init__(self):
         if self.algorithm not in ALGORITHMS:
@@ -104,12 +116,22 @@ class P2PConfig:
                 f"unknown protocol {self.protocol!r}; one of "
                 f"{protocols_lib.protocol_names()}"
             )
-        if self.schedule not in graph_lib.SCHEDULES:
+        if self.schedule not in graph_lib.SCHEDULES + ("adaptive",):
             raise ValueError(
-                f"unknown schedule {self.schedule!r}; one of {graph_lib.SCHEDULES}"
+                f"unknown schedule {self.schedule!r}; one of "
+                f"{graph_lib.SCHEDULES + ('adaptive',)}"
             )
         if self.schedule_rounds < 1:
             raise ValueError("schedule_rounds must be >= 1")
+        if self.partner_rule not in graph_lib.ADAPTIVE_RULES:
+            raise ValueError(
+                f"unknown partner_rule {self.partner_rule!r}; one of "
+                f"{graph_lib.ADAPTIVE_RULES}"
+            )
+        if not 0.0 <= self.adaptive_eps <= 1.0:
+            raise ValueError("adaptive_eps must be in [0, 1]")
+        if self.schedule == "adaptive" and self.num_peers < 2:
+            raise ValueError("adaptive partner selection needs at least two peers")
         if self.schedule == "round_robin" and not self.round_robin_topologies:
             raise ValueError("round_robin schedule needs round_robin_topologies")
         object.__setattr__(
@@ -139,13 +161,38 @@ class P2PConfig:
         return self.max_norm_init or self.algorithm in ("p2pl", "p2pl_affinity")
 
 
+class AdaptiveState(NamedTuple):
+    """Run state of the adaptive (state-dependent) partner selection.
+
+    Both leaves carry the stacked leading K axis like every other state leaf
+    (one row per peer in the vmap runtime, a (1, ...) block per mesh slice in
+    the pod runtime), so the existing sharding specs, scan carry, and buffer
+    donation apply unchanged:
+
+    ``key``         (K, 2) uint32 — the PRNG key driving partner randomness,
+                    replicated row-wise (every peer holds the SAME key, so all
+                    peers derive the SAME matching with no extra traffic); one
+                    split is consumed per round inside the jitted step.
+    ``last_losses`` (K,) f32 — each peer's mean training loss of the previous
+                    round, the selection signal of loss-proximity pairing.  In
+                    the pod runtime this is the "cheap K-vector" exchanged per
+                    round: one all_gather of K scalars.
+    """
+
+    key: jax.Array  # (K, 2) uint32, identical rows
+    last_losses: jax.Array  # (K,) f32
+
+
 class P2PState(NamedTuple):
     """Stacked peer state; every leaf has leading axis K.
 
     ``protocol`` holds the consensus protocol's own state: ``()`` for gossip
     (stateless), ``protocols.PushSumState(mass=(K,))`` for push_sum — the
     per-peer scalar mass whose ratio de-biases the parameters.  It rides
-    through the jitted round like any other leaf.
+    through the jitted round like any other leaf.  ``adaptive`` is ``()``
+    unless ``cfg.schedule == "adaptive"``, in which case it carries the
+    ``AdaptiveState`` (PRNG key + previous-round per-peer losses) that the
+    round step consumes to build the round's topology on device.
     """
 
     params: PyTree
@@ -154,6 +201,7 @@ class P2PState(NamedTuple):
     b_bias: PyTree  # affinity consensus-phase bias (Eq. 4)
     round_idx: jax.Array  # scalar int32
     protocol: PyTree = ()  # consensus-protocol state (see protocols.py)
+    adaptive: PyTree = ()  # AdaptiveState for schedule="adaptive", else ()
 
 
 def build_schedule(cfg: P2PConfig) -> graph_lib.GraphSchedule:
@@ -161,6 +209,13 @@ def build_schedule(cfg: P2PConfig) -> graph_lib.GraphSchedule:
     build = lambda topo: graph_lib.build_graph(  # noqa: E731
         topo, cfg.num_peers, p=cfg.erdos_renyi_p, seed=cfg.graph_seed
     )
+    if cfg.schedule == "adaptive":
+        raise ValueError(
+            "schedule='adaptive' has no pretraced graph sequence: each "
+            "round's topology is computed on device from run state "
+            "(graph.adaptive_round_matrices inside the jitted round step); "
+            "there is no GraphSchedule to build"
+        )
     if cfg.schedule == "static":
         return graph_lib.static_schedule(build(cfg.topology))
     if cfg.schedule == "link_dropout":
@@ -244,6 +299,16 @@ def init_state(
         params = consensus_lib.max_norm_sync(params)
     zeros = jax.tree.map(jnp.zeros_like, params)
     proto = protocols_lib.get_protocol(cfg.protocol)
+    adaptive: PyTree = ()
+    if cfg.schedule == "adaptive":
+        # every peer holds the SAME key (replicated rows), so all peers derive
+        # the same matching each round; losses start at 0, so round 0's
+        # loss-proximity matching is the deterministic tie-break pairing
+        sel_key = jax.random.PRNGKey(cfg.adaptive_seed)
+        adaptive = AdaptiveState(
+            key=jnp.broadcast_to(sel_key[None, :], (cfg.num_peers, 2)),
+            last_losses=jnp.zeros((cfg.num_peers,), jnp.float32),
+        )
     return P2PState(
         params=params,
         momentum=zeros,
@@ -251,6 +316,7 @@ def init_state(
         b_bias=jax.tree.map(jnp.zeros_like, params),
         round_idx=jnp.zeros((), jnp.int32),
         protocol=proto.init_state(params, data_sizes),
+        adaptive=adaptive,
     )
 
 
@@ -259,7 +325,7 @@ def init_state(
 # ---------------------------------------------------------------------------
 
 
-def local_phase(
+def _local_phase_stats(
     state: P2PState,
     loss_fn: LossFn,
     batches: PyTree,
@@ -267,15 +333,19 @@ def local_phase(
     *,
     axis_name: str | None = None,
 ) -> tuple[P2PState, jax.Array]:
-    """Run T local steps on every peer.
+    """``local_phase`` returning the full (T, K) per-step per-peer losses.
 
-    batches: pytree whose leaves are (T, K, ...) — step-major, then peer.
-    Returns (new_state, per-step mean loss (T,)).
+    The public ``local_phase`` reduces them to the (T,) per-step mean; the
+    adaptive schedule path needs the K axis intact (each peer's mean loss is
+    the next round's partner-selection signal), so the scan body lives here
+    and both consumers apply their own reduction to the SAME materialized
+    buffer — which is what keeps the reported losses bit-identical across the
+    runtimes and drivers.
 
     ``axis_name`` is set by the sharded runtime, where K is a mesh axis and
-    the leaves seen here are (1, ...) blocks: the per-step loss mean then
-    all-gathers the K per-peer scalars first, so the reduction runs over the
-    same (K,) vector — and produces the same bits — as the vmap runtime.
+    the leaves seen here are (1, ...) blocks: the (T, 1) per-step losses then
+    all-gather the K per-peer scalars, so any later reduction runs over the
+    same (T, K) buffer — and produces the same bits — as the vmap runtime.
     """
     # one forward serves both the loss value and the gradient: cheaper than
     # separate vmap(loss)/vmap(grad) passes, and it pins the loss to the same
@@ -304,13 +374,12 @@ def local_phase(
         return (params, mom), losses
 
     (params, mom), losses = jax.lax.scan(step, (state.params, state.momentum), batches)
-    # cross-peer loss mean OUTSIDE the scan, on the materialized (T, K)
+    # cross-peer reductions OUTSIDE the scan, on the materialized (T, K)
     # buffer: an in-scan mean compiles differently in the (XLA-peeled) first
     # iteration than in the loop body, so the vmap and shard_map runtimes
     # would disagree in the last ulp; out here both reduce identical buffers
     if axis_name is not None:
         losses = jax.lax.all_gather(losses, axis_name, axis=1, tiled=True)  # (T, K)
-    losses = jnp.mean(losses, axis=1)  # (T,) per-step mean over peers
 
     # b <- (1/S) w (updated during local learning; fixed during consensus).
     b_bias = state.b_bias
@@ -319,6 +388,25 @@ def local_phase(
         b_bias = jax.tree.map(lambda w: w / s, params)
 
     return state._replace(params=params, momentum=mom, b_bias=b_bias), losses
+
+
+def local_phase(
+    state: P2PState,
+    loss_fn: LossFn,
+    batches: PyTree,
+    cfg: P2PConfig,
+    *,
+    axis_name: str | None = None,
+) -> tuple[P2PState, jax.Array]:
+    """Run T local steps on every peer.
+
+    batches: pytree whose leaves are (T, K, ...) — step-major, then peer.
+    Returns (new_state, per-step mean loss (T,)).
+    """
+    state, losses = _local_phase_stats(
+        state, loss_fn, batches, cfg, axis_name=axis_name
+    )
+    return state, jnp.mean(losses, axis=1)  # (T,) per-step mean over peers
 
 
 # ---------------------------------------------------------------------------
@@ -559,8 +647,58 @@ def _make_round_step(
     whole chunk of calls inside one jitted program.  Sharing the step is what
     keeps the python-loop and scan drivers running the SAME per-round
     expression graph — the basis of their fp32 bit-parity contract.
+
+    ``cfg.schedule == "adaptive"`` swaps the pretraced ``round_idx % R``
+    constant stack for ``graph.adaptive_round_matrices``: the round's (K, K)
+    W/Beta are computed inside the step from ``state.adaptive`` (previous
+    round's per-peer losses + the threaded PRNG key), then the step stores
+    this round's per-peer mean losses and the advanced key for the next
+    round.  Still one compile per run — the selection is ordinary traced
+    arithmetic, not a host callback.
     """
+    adaptive = cfg.schedule == "adaptive"
+    proto = protocols_lib.get_protocol(cfg.protocol)
+    sizes_dev = (
+        None if data_sizes is None
+        else jnp.asarray(np.asarray(data_sizes), jnp.float32)
+    )
+
+    def adaptive_consts(ad: "AdaptiveState", losses_full: jax.Array):
+        """(this round's ProtocolConstants, next round's key) from run state.
+
+        ``losses_full`` is the gathered (K,) selection signal — identical
+        bits in both runtimes (the vmap runtime reads the stacked leaf, the
+        pod runtime all-gathers the K scalars), so the matching, and with it
+        the round's whole topology, is too.
+        """
+        key_round, key_next = jax.random.split(ad.key[0])
+        w, beta = graph_lib.adaptive_round_matrices(
+            losses_full, key_round, rule=cfg.partner_rule,
+            eps=cfg.adaptive_eps, data_sizes=sizes_dev,
+            consensus_step_size=cfg.consensus_step_size,
+            stochasticity=proto.stochasticity,
+        )
+        return protocols_lib.ProtocolConstants(w=w, beta=beta), key_next
+
     if mesh is None:
+        if adaptive:
+
+            def step(state: P2PState, batches: PyTree):
+                ad = state.adaptive
+                consts, key_next = adaptive_consts(ad, ad.last_losses)
+                after_local, losses_tk = _local_phase_stats(
+                    state, loss_fn, batches, cfg
+                )
+                new_ad = AdaptiveState(
+                    key=jnp.broadcast_to(key_next[None, :], ad.key.shape),
+                    last_losses=jnp.mean(losses_tk, axis=0),  # (K,) per peer
+                )
+                after_local = after_local._replace(adaptive=new_ad)
+                after_cons = consensus_phase(after_local, cfg, consts)
+                return after_local, after_cons, jnp.mean(losses_tk, axis=1)
+
+            return step
+
         consts_np, _ = protocol_constants(cfg, data_sizes)
         consts = protocols_lib.ProtocolConstants(
             w=jnp.asarray(consts_np.w, jnp.float32),  # (R, K, K)
@@ -585,13 +723,59 @@ def _make_round_step(
             f"{cfg.num_peers} slices, got mesh shape {axis_sizes} "
             "(see repro.launch.mesh.make_peer_mesh)"
         )
+    shard_map = _shard_map_fn()
+    from jax.sharding import PartitionSpec as P
+
+    if adaptive:
+        # Any pair may be matched on any round, so the candidate lane set
+        # covers the COMPLETE graph: the ppermute structure (lanes and their
+        # perms) stays a trace-time constant while the round's on-device
+        # weights null every edge the matching did not select — zero rows of
+        # the gathered params meet zero mixing weights, contributing exactly
+        # +-0.0, just as on a pretraced schedule's absent edges.
+        union = ~np.eye(cfg.num_peers, dtype=bool)
+        lanes = graph_lib.edge_color_lanes(union)
+
+        def block_adaptive(state: P2PState, batches: PyTree):
+            after_local, losses_tk = _local_phase_stats(
+                state, loss_fn, batches, cfg, axis_name=axis_name
+            )
+            ad = state.adaptive
+            # the cheap K-vector exchange: each peer contributes one scalar
+            losses_full = jax.lax.all_gather(
+                ad.last_losses, axis_name, axis=0, tiled=True
+            )  # (K,)
+            consts, key_next = adaptive_consts(ad, losses_full)
+            my = jax.lax.axis_index(axis_name)
+            peer_losses = jnp.mean(losses_tk, axis=0)  # (K,) replicated
+            new_ad = AdaptiveState(
+                key=key_next[None, :],  # this peer's (1, 2) block
+                last_losses=jax.lax.dynamic_slice(peer_losses, (my,), (1,)),
+            )
+            after_local = after_local._replace(adaptive=new_ad)
+            after_cons = consensus_phase_sharded(
+                after_local, cfg, consts, axis_name=axis_name, lanes=lanes
+            )
+            return after_local, after_cons, jnp.mean(losses_tk, axis=1)
+
+        def step(state: P2PState, batches: PyTree):
+            s_specs = specs_lib.peer_stacked_pspecs(state, peer_axis=axis_name)
+            b_specs = specs_lib.peer_batch_pspecs(batches, peer_axis=axis_name)
+            mapped = shard_map(
+                block_adaptive,
+                mesh=mesh,
+                in_specs=(s_specs, b_specs),
+                out_specs=(s_specs, s_specs, P(None)),
+            )
+            return mapped(state, batches)
+
+        return step
+
     consts_np, sched = protocol_constants(cfg, data_sizes)
     w_dev = jnp.asarray(consts_np.w, jnp.float32)  # (R, K, K)
     beta_dev = jnp.asarray(consts_np.beta, jnp.float32)
     period = w_dev.shape[0]
     lanes = graph_lib.schedule_lanes(sched)
-    shard_map = _shard_map_fn()
-    from jax.sharding import PartitionSpec as P
 
     def block(state: P2PState, batches: PyTree, w_stack, beta_stack):
         # the per-step loss means all-gather inside the block (axis_name), so

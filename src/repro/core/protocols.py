@@ -80,6 +80,13 @@ class ConsensusProtocol:
     # (asymmetric-adjacency) schedules; the runtime warns when a
     # directed-incapable protocol is configured on a directed schedule.
     directed_capable: bool = False
+    # Which stochasticity the protocol's ``w`` matrix obeys ("row" for
+    # gossip-style averaging, "column" for push-sum mass splitting).  The
+    # adaptive (state-dependent) schedule path reads this to build each
+    # round's on-device matrices with the right normalization
+    # (``graph.adaptive_round_matrices(..., stochasticity=...)``); the
+    # pretraced path encodes the same choice inside ``constants``.
+    stochasticity: str = "row"
 
     def init_state(self, params: PyTree, data_sizes: Sequence[int] | None = None) -> PyTree:
         """Per-run protocol state (a pytree carried in ``P2PState.protocol``)."""
@@ -220,6 +227,7 @@ class PushSumProtocol(ConsensusProtocol):
 
     name = "push_sum"
     directed_capable = True
+    stochasticity = "column"
 
     def init_state(
         self, params: PyTree, data_sizes: Sequence[int] | None = None

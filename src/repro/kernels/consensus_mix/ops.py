@@ -15,6 +15,16 @@ appended all-ones lane of the flattened parameters while the sparse weights
 are pre-scaled by the sender's mass, so a single fused pass yields the mixed
 numerators, the new mass, AND the affinity d of the de-biased parameters.
 
+``consensus_mix_dense`` / ``consensus_mix_push_sum_dense`` — the
+*dense-dynamic* path for state-dependent (adaptive) topologies: the (K, K)
+W/Beta are TRACED values computed inside the program each round
+(``graph.adaptive_round_matrices``), so no host-built sparse structure
+exists.  The candidate neighbor set is the static complete graph (every
+``j != k``, a trace-time constant) and the per-candidate weights are gathered
+dynamically from the dense matrices — unselected candidates carry weight 0
+and contribute exactly +-0.0, so one kernel shape serves every matching the
+selection can produce, preserving the one-compile property.
+
 Every entry point takes ``interpret: bool | None = None`` and resolves the
 default through ``repro.kernels.lowering`` — interpret mode on CPU (the only
 mode Pallas can run there), compiled lowering on real accelerators, with the
@@ -163,6 +173,82 @@ def consensus_mix_push_sum_stacked(
         unflatten_pytree(stacked, debiased),
         unflatten_pytree(stacked, d[:, :-1]),
         new_mass,
+    )
+
+
+def _complete_candidates(k: int) -> jax.Array:
+    """Static (K, K-1) candidate indices: every peer j != k, row-major.
+
+    The dense-dynamic path's neighbor structure — a trace-time constant that
+    admits EVERY possible edge; the traced weights decide which contribute.
+    """
+    if k < 2:
+        raise ValueError("dense-dynamic consensus needs at least two peers")
+    idx = np.arange(k)
+    cand = np.stack([np.concatenate([idx[:i], idx[i + 1 :]]) for i in range(k)])
+    return jnp.asarray(cand.astype(np.int32))
+
+
+def _dense_operands(
+    w_mat: jax.Array, beta_mat: jax.Array
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """(self_w, nbr_idx, nbr_w, beta) from TRACED dense (K, K) matrices.
+
+    The traced analogue of ``sparse_from_matrices``: the candidate structure
+    is the static complete graph, the weights are dynamic gathers from the
+    dense matrices, so the stacked kernel entry points consume them unchanged.
+    """
+    k = w_mat.shape[0]
+    nbr_idx = _complete_candidates(k)  # (K, K-1)
+    rows = jnp.arange(k, dtype=jnp.int32)[:, None]
+    self_w = jnp.diagonal(w_mat).astype(jnp.float32)
+    nbr_w = w_mat[rows, nbr_idx].astype(jnp.float32)
+    beta_p = beta_mat[rows, nbr_idx].astype(jnp.float32)
+    return self_w, nbr_idx, nbr_w, beta_p
+
+
+@functools.partial(jax.jit, static_argnames=("local_steps", "interpret"))
+def consensus_mix_dense(
+    stacked: PyTree,  # leaves (K, ...)
+    w_mat: jax.Array,  # (K, K) TRACED row-stochastic mixing matrix
+    beta_mat: jax.Array,  # (K, K) TRACED affinity matrix
+    local_steps: int,
+    *,
+    interpret: bool | None = None,
+) -> tuple[PyTree, PyTree]:
+    """One gossip step + affinity d from DYNAMIC dense matrices, via the kernel.
+
+    Unlike ``consensus_mix_stacked``/``_schedule`` (host-built sparse
+    structure), ``w_mat``/``beta_mat`` may be values computed inside the
+    traced program — e.g. an adaptive round's on-device
+    ``graph.adaptive_round_matrices`` output.  The candidate set is the static
+    complete graph; weights of unselected edges are zero.  Equivalent to
+    ``consensus_lib.mix_stacked`` + the affinity-d update.
+    Returns (mixed_params, d_bias).
+    """
+    self_w, nbr_idx, nbr_w, beta_p = _dense_operands(w_mat, beta_mat)
+    return consensus_mix_stacked(
+        stacked, self_w, nbr_idx, nbr_w, beta_p, local_steps, interpret=interpret
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("local_steps", "interpret"))
+def consensus_mix_push_sum_dense(
+    stacked: PyTree,  # leaves (K, ...) — the DE-BIASED parameters
+    mass: jax.Array,  # (K,) push-sum mass y
+    w_mat: jax.Array,  # (K, K) TRACED column-stochastic push matrix
+    beta_mat: jax.Array,  # (K, K) TRACED affinity matrix
+    local_steps: int,
+    *,
+    interpret: bool | None = None,
+) -> tuple[PyTree, PyTree, jax.Array]:
+    """Dense-dynamic form of ``consensus_mix_push_sum_stacked``: one push-sum
+    step + affinity d from TRACED dense matrices (adaptive directed rounds).
+    Returns (mixed_params, d_bias, new_mass)."""
+    self_w, nbr_idx, nbr_w, beta_p = _dense_operands(w_mat, beta_mat)
+    return consensus_mix_push_sum_stacked(
+        stacked, mass, self_w, nbr_idx, nbr_w, beta_p, local_steps,
+        interpret=interpret,
     )
 
 

@@ -36,6 +36,7 @@ from repro.configs.p2pl_mnist import (
     timevarying_k8,
 )
 from repro.core import consensus as consensus_lib
+from repro.core import graph as graph_lib
 from repro.core import metrics as metrics_lib
 from repro.core import p2p
 from repro.core import protocols as protocols_lib
@@ -274,10 +275,29 @@ def main(argv=None):
     ap.add_argument("--local-steps", type=int, default=10)
     ap.add_argument("--schedule", default=None,
                     choices=["static", "link_dropout", "random_matching",
-                             "peer_churn", "round_robin", "one_way_matching"],
+                             "peer_churn", "round_robin", "one_way_matching",
+                             "adaptive"],
                     help="communication-graph schedule for timevarying_* / "
-                         "directed_* experiments (default: link_dropout for "
-                         "timevarying_*, static for directed_k8)")
+                         "directed_* / sharded_* experiments (default: "
+                         "link_dropout for timevarying_*, static for "
+                         "directed_k8).  'adaptive' selects gossip partners "
+                         "ON DEVICE each round from the peers' own training "
+                         "losses (see --partner-rule); composes with every "
+                         "--driver / --peer-axis / --protocol")
+    ap.add_argument("--partner-rule", default="loss_proximity",
+                    choices=sorted(graph_lib.ADAPTIVE_RULES),
+                    help="how --schedule adaptive scores candidate partners: "
+                         "loss_proximity pairs peers with the closest recent "
+                         "training loss (Onoszko et al.), random is the "
+                         "matched-communication baseline, eps_greedy explores "
+                         "a random matching with probability --adaptive-eps")
+    ap.add_argument("--adaptive-eps", type=float, default=0.1,
+                    help="exploration probability for --partner-rule "
+                         "eps_greedy (in [0, 1])")
+    ap.add_argument("--adaptive-seed", type=int, default=0,
+                    help="seeds the PRNG key threaded through the adaptive "
+                         "selection state (the --schedule-seed of "
+                         "state-dependent schedules)")
     ap.add_argument("--schedule-rounds", type=int, default=16,
                     help="period of the stochastic schedule (cycled)")
     ap.add_argument("--link-survival-prob", type=float, default=0.7)
@@ -294,6 +314,8 @@ def main(argv=None):
     ap.add_argument("--out", default="")
     ap.add_argument("--arch", default="smollm-135m")
     args = ap.parse_args(argv)
+    if not 0.0 <= args.adaptive_eps <= 1.0:
+        ap.error(f"--adaptive-eps must be in [0, 1], got {args.adaptive_eps}")
 
     t0 = time.time()
     if args.experiment == "p2p_lm":
@@ -314,12 +336,16 @@ def main(argv=None):
             round_robin_topologies=tuple(
                 t for t in args.round_robin_topologies.split(",") if t
             ),
+            partner_rule=args.partner_rule,
+            adaptive_eps=args.adaptive_eps,
+            adaptive_seed=args.adaptive_seed,
         )
     elif args.experiment == "directed_k8":
         schedule = args.schedule or "static"
-        if schedule not in ("static", "link_dropout", "one_way_matching"):
+        if schedule not in ("static", "link_dropout", "one_way_matching",
+                            "adaptive"):
             ap.error(f"directed_k8 supports --schedule static|link_dropout|"
-                     f"one_way_matching, got {schedule!r}")
+                     f"one_way_matching|adaptive, got {schedule!r}")
         exp = directed_k8(
             schedule,
             args.protocol or "push_sum",
@@ -327,6 +353,9 @@ def main(argv=None):
             args.local_steps,
             schedule_rounds=args.schedule_rounds,
             link_survival_prob=args.link_survival_prob,
+            partner_rule=args.partner_rule,
+            adaptive_eps=args.adaptive_eps,
+            adaptive_seed=args.adaptive_seed,
         )
     elif args.experiment == "sharded_k8":
         exp = sharded_k8(
@@ -339,6 +368,9 @@ def main(argv=None):
             round_robin_topologies=tuple(
                 t for t in args.round_robin_topologies.split(",") if t
             ),
+            partner_rule=args.partner_rule,
+            adaptive_eps=args.adaptive_eps,
+            adaptive_seed=args.adaptive_seed,
         )
     elif args.experiment == "iid_k100":
         exp = iid_k100(args.topology)

@@ -1,0 +1,413 @@
+"""Adaptive loss-driven partner selection (state-dependent topologies).
+
+Contract under test (the tentpole's acceptance criteria):
+
+* **On-device builders** — ``graph.adaptive_round_matrices`` produces exactly
+  row- (gossip) / column- (push_sum) stochastic matrices from a traceable
+  greedy matching that is symmetric, deterministic in (losses, key), and
+  actually pairs loss-proximal peers under the ``loss_proximity`` rule.
+* **One compile per run** — the selection happens inside the jitted round
+  step (both the python-loop and scan drivers; the pod cells live in
+  tests/test_mesh_runtime.py under the ``mesh`` marker), for both protocols.
+* **Driver parity** — python-loop and scan drivers are fp32 BIT-identical on
+  adaptive schedules, exactly as on pretraced ones.
+* **Dense-dynamic kernel path** — ``consensus_mix_dense`` /
+  ``consensus_mix_push_sum_dense`` match the runtime's einsum mix + affinity
+  d for TRACED (K, K) matrices.
+* **Config/CLI validation** — unknown rules and malformed eps fail fast.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import consensus as cl
+from repro.core import graph as gl
+from repro.core import p2p, protocols
+from repro.kernels.consensus_mix import ops
+
+K = 8
+T = 3
+CHUNK = 3
+
+
+def _init_fn(key):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": jax.random.normal(k1, (6, 16)),
+        "b1": jnp.zeros((16,)),
+        "w2": jax.random.normal(k2, (16, 4)),
+    }
+
+
+def _mlp_loss(p, batch):
+    x, y = batch
+    h = jnp.tanh(x @ p["w1"] + p["b1"])
+    return jnp.mean(jnp.sum(jnp.square(h @ p["w2"] - y), axis=-1))
+
+
+def _cfg(protocol: str, rule: str = "loss_proximity", num_peers: int = K):
+    return p2p.P2PConfig(
+        algorithm="p2pl_affinity", num_peers=num_peers, local_steps=T,
+        consensus_steps=2, lr=0.1, momentum=0.3, eta_d=0.5, eta_b=0.1,
+        schedule="adaptive", partner_rule=rule, protocol=protocol,
+    )
+
+
+def _round_batches(rng, t, k=K):
+    x = jnp.asarray(rng.normal(size=(t, k, 10, 6)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(t, k, 10, 4)), jnp.float32)
+    return (x, y)
+
+
+# ---------------------------------------------------------------------------
+# On-device builders
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rule", gl.ADAPTIVE_RULES)
+@pytest.mark.parametrize("k", [2, 5, 8])
+def test_matching_is_symmetric_and_stochastic(rule, k):
+    """partner[partner[i]] == i; W rows (or columns) sum to exactly 1 with
+    nonnegative entries; Beta rows are one-hot at the partner."""
+    losses = jnp.asarray(np.random.default_rng(k).normal(size=(k,)), jnp.float32)
+    key = jax.random.PRNGKey(7)
+    partner = np.asarray(gl.greedy_matching(gl.partner_scores(losses, key, rule)))
+    assert (partner[partner] == np.arange(k)).all()
+    # even K: perfect matching; odd K: exactly one self-matched peer
+    assert (partner == np.arange(k)).sum() == k % 2
+
+    sizes = jnp.asarray(np.arange(1, k + 1), jnp.float32)
+    w, beta = gl.adaptive_round_matrices(
+        losses, key, rule=rule, data_sizes=sizes, stochasticity="row"
+    )
+    w, beta = np.asarray(w), np.asarray(beta)
+    assert (w >= 0).all()
+    np.testing.assert_allclose(w.sum(axis=1), 1.0, atol=1e-6)
+    a, _ = gl.adaptive_round_matrices(
+        losses, key, rule=rule, data_sizes=sizes, stochasticity="column"
+    )
+    a = np.asarray(a)
+    assert (a >= 0).all()
+    np.testing.assert_allclose(a.sum(axis=0), 1.0, atol=1e-6)
+    # beta: one-hot at the partner for matched peers, zero row otherwise
+    for i in range(k):
+        want = np.zeros(k)
+        if partner[i] != i:
+            want[partner[i]] = 1.0
+        np.testing.assert_array_equal(beta[i], want)
+
+
+def test_loss_proximity_pairs_nearest_losses():
+    """Four well-separated loss clusters of two peers each: the greedy
+    matching must pair within clusters."""
+    losses = jnp.asarray([1.0, 3.0, 1.1, 2.9, 0.2, 0.25, 7.0, 6.9])
+    partner = np.asarray(
+        gl.greedy_matching(gl.partner_scores(losses, jax.random.PRNGKey(0),
+                                             "loss_proximity"))
+    )
+    np.testing.assert_array_equal(partner, [2, 3, 0, 1, 5, 4, 7, 6])
+
+
+def test_random_rule_varies_with_key_not_losses():
+    losses_a = jnp.zeros((K,))
+    losses_b = jnp.asarray(np.random.default_rng(0).normal(size=(K,)), jnp.float32)
+    k1, k2 = jax.random.PRNGKey(1), jax.random.PRNGKey(2)
+    m = lambda ls, key: np.asarray(  # noqa: E731
+        gl.greedy_matching(gl.partner_scores(ls, key, "random"))
+    )
+    np.testing.assert_array_equal(m(losses_a, k1), m(losses_b, k1))
+    assert not np.array_equal(m(losses_a, k1), m(losses_a, k2))
+
+
+def test_eps_greedy_bounds():
+    """eps=0 is pure loss proximity, eps=1 is pure random — bit for bit."""
+    losses = jnp.asarray(np.random.default_rng(3).normal(size=(K,)), jnp.float32)
+    key = jax.random.PRNGKey(3)
+    greedy0 = gl.partner_scores(losses, key, "eps_greedy", eps=0.0)
+    np.testing.assert_array_equal(
+        np.asarray(greedy0), np.asarray(gl.partner_scores(losses, key, "loss_proximity"))
+    )
+    greedy1 = gl.partner_scores(losses, key, "eps_greedy", eps=1.0)
+    np.testing.assert_array_equal(
+        np.asarray(greedy1), np.asarray(gl.partner_scores(losses, key, "random"))
+    )
+
+
+def test_consensus_step_size_keeps_stochasticity():
+    losses = jnp.asarray(np.random.default_rng(4).normal(size=(5,)), jnp.float32)
+    w, _ = gl.adaptive_round_matrices(
+        losses, jax.random.PRNGKey(4), consensus_step_size=0.3
+    )
+    np.testing.assert_allclose(np.asarray(w).sum(axis=1), 1.0, atol=1e-6)
+    a, _ = gl.adaptive_round_matrices(
+        losses, jax.random.PRNGKey(4), consensus_step_size=0.3,
+        stochasticity="column",
+    )
+    np.testing.assert_allclose(np.asarray(a).sum(axis=0), 1.0, atol=1e-6)
+
+
+def test_builders_reject_unknown_names():
+    losses = jnp.zeros((4,))
+    key = jax.random.PRNGKey(0)
+    with pytest.raises(ValueError, match="partner rule"):
+        gl.partner_scores(losses, key, "nope")
+    with pytest.raises(ValueError, match="stochasticity"):
+        gl.matching_matrices(jnp.arange(4, dtype=jnp.int32), stochasticity="diag")
+
+
+# ---------------------------------------------------------------------------
+# Runtime integration: one compile, state threading, driver parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("protocol", ["gossip", "push_sum"])
+def test_adaptive_round_fn_single_compile(protocol):
+    """Adaptive selection runs INSIDE the jitted round fn: the loss traces
+    once across many rounds (python-loop driver, vmap runtime)."""
+    traces = [0]
+
+    def counting_loss(params, batch):
+        traces[0] += 1
+        return _mlp_loss(params, batch)
+
+    cfg = _cfg(protocol, "eps_greedy")
+    state = p2p.init_state(jax.random.PRNGKey(0), _init_fn, cfg)
+    fn = p2p.make_round_fn(counting_loss, cfg)
+    rng = np.random.default_rng(0)
+    for _ in range(7):
+        _, state, losses = fn(state, _round_batches(rng, T))
+    assert int(state.round_idx) == 7
+    assert np.isfinite(np.asarray(losses)).all()
+    assert traces[0] <= 2  # value + grad trace of the single compile
+    assert fn._cache_size() == 1  # the jit cache agrees
+
+
+@pytest.mark.parametrize("protocol", ["gossip", "push_sum"])
+def test_adaptive_scan_driver_single_compile(protocol):
+    """...and inside the scanned multi-round driver: one compile covers every
+    chunk of an adaptive run."""
+    traces = [0]
+
+    def counting_loss(params, batch):
+        traces[0] += 1
+        return _mlp_loss(params, batch)
+
+    cfg = _cfg(protocol)
+    state = p2p.init_state(jax.random.PRNGKey(1), _init_fn, cfg)
+    drive = p2p.make_scan_driver(counting_loss, cfg)
+    rng = np.random.default_rng(1)
+    for _ in range(3):
+        x = jnp.asarray(rng.normal(size=(CHUNK, T, K, 10, 6)), jnp.float32)
+        y = jnp.asarray(rng.normal(size=(CHUNK, T, K, 10, 4)), jnp.float32)
+        _, state, losses = drive(state, (x, y))
+    assert int(state.round_idx) == 3 * CHUNK
+    assert np.isfinite(np.asarray(losses)).all()
+    assert traces[0] <= 2
+    assert drive._cache_size() == 1
+
+
+def test_adaptive_state_threads_through_rounds():
+    """The AdaptiveState leaves update per round: last_losses becomes this
+    round's per-peer mean loss, the key advances, rows stay replicated."""
+    cfg = _cfg("gossip")
+    sizes = np.arange(1, K + 1)
+    state = p2p.init_state(jax.random.PRNGKey(2), _init_fn, cfg, data_sizes=sizes)
+    assert isinstance(state.adaptive, p2p.AdaptiveState)
+    np.testing.assert_array_equal(np.asarray(state.adaptive.last_losses), 0.0)
+    key0 = np.asarray(state.adaptive.key)
+    assert (key0 == key0[0]).all()
+
+    fn = p2p.make_round_fn(_mlp_loss, cfg, data_sizes=sizes)
+    rng = np.random.default_rng(2)
+    prev_key = key0
+    for _ in range(3):
+        _, state, _ = fn(state, _round_batches(rng, T))
+        ll = np.asarray(state.adaptive.last_losses)
+        assert ll.shape == (K,) and np.isfinite(ll).all() and (ll > 0).any()
+        keys = np.asarray(state.adaptive.key)
+        assert (keys == keys[0]).all()  # still replicated row-wise
+        assert not np.array_equal(keys, prev_key)  # and advanced
+        prev_key = keys
+
+
+def test_adaptive_push_sum_conserves_mass():
+    cfg = _cfg("push_sum", "random")
+    sizes = np.arange(1, K + 1)
+    state = p2p.init_state(jax.random.PRNGKey(3), _init_fn, cfg, data_sizes=sizes)
+    fn = p2p.make_round_fn(_mlp_loss, cfg, data_sizes=sizes)
+    rng = np.random.default_rng(3)
+    for _ in range(5):
+        _, state, _ = fn(state, _round_batches(rng, T))
+        mass = np.asarray(state.protocol.mass)
+        np.testing.assert_allclose(mass.sum(), K, rtol=1e-5)
+        assert (mass > 0).all()
+
+
+@pytest.mark.parametrize("protocol", ["gossip", "push_sum"])
+@pytest.mark.parametrize("rule", ["loss_proximity", "eps_greedy"])
+def test_adaptive_scan_driver_bit_identical_to_python_loop(protocol, rule):
+    """Two adaptive scan chunks == 2*CHUNK python-loop rounds, bit for bit on
+    every leaf — including the threaded AdaptiveState."""
+    cfg = _cfg(protocol, rule)
+    sizes = np.arange(1, K + 1)
+    state0 = p2p.init_state(jax.random.PRNGKey(4), _init_fn, cfg, data_sizes=sizes)
+    round_fn = p2p.make_round_fn(_mlp_loss, cfg, data_sizes=sizes)
+    drive_fn = p2p.make_scan_driver(_mlp_loss, cfg, data_sizes=sizes, donate=False)
+
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(size=(2, CHUNK, T, K, 10, 6)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(2, CHUNK, T, K, 10, 4)), jnp.float32)
+
+    s_py, losses_py, al_py = state0, [], None
+    for c in range(2):
+        for r in range(CHUNK):
+            al_py, s_py, loss_r = round_fn(s_py, (x[c, r], y[c, r]))
+            losses_py.append(np.asarray(loss_r))
+    s_sc, al_sc, losses_sc = state0, None, []
+    for c in range(2):
+        al_sc, s_sc, loss_c = drive_fn(s_sc, (x[c], y[c]))
+        losses_sc.append(np.asarray(loss_c))
+
+    want = jax.tree_util.tree_leaves_with_path((al_py, s_py))
+    got = jax.tree_util.tree_leaves_with_path((al_sc, s_sc))
+    assert len(want) == len(got)
+    for (path, w), (_, g) in zip(want, got):
+        assert np.array_equal(np.asarray(w), np.asarray(g)), (
+            f"{protocol}/{rule} leaf {jax.tree_util.keystr(path)} diverged"
+        )
+    assert np.array_equal(np.stack(losses_py), np.concatenate(losses_sc))
+
+
+def test_adaptive_selection_actually_depends_on_state():
+    """The tentpole's point: two runs with identical configs but different
+    data must diverge in WHICH partners they pick (the topology is run-state
+    -dependent, not pretraced)."""
+    cfg = p2p.P2PConfig(
+        algorithm="p2pl_affinity", num_peers=K, local_steps=T,
+        consensus_steps=1, lr=0.3, eta_d=0.5, schedule="adaptive",
+        partner_rule="loss_proximity",
+    )
+    proto = protocols.get_protocol(cfg.protocol)
+
+    def matchings(data_seed, rounds=6):
+        state = p2p.init_state(jax.random.PRNGKey(5), _init_fn, cfg)
+        fn = p2p.make_round_fn(_mlp_loss, cfg)
+        rng = np.random.default_rng(data_seed)
+        picked = []
+        for _ in range(rounds):
+            _, state, _ = fn(state, _round_batches(rng, T))
+            ad = state.adaptive
+            partner = gl.greedy_matching(gl.partner_scores(
+                ad.last_losses, jax.random.split(ad.key[0])[0],
+                cfg.partner_rule, cfg.adaptive_eps,
+            ))
+            assert proto.stochasticity == "row"
+            picked.append(np.asarray(partner))
+        return np.stack(picked)
+
+    a, b = matchings(10), matchings(11)
+    assert not np.array_equal(a, b), "partner choice ignored the run state"
+
+
+# ---------------------------------------------------------------------------
+# Dense-dynamic kernel path
+# ---------------------------------------------------------------------------
+
+
+def test_consensus_mix_dense_matches_runtime_mix(rng):
+    """TRACED (K, K) matrices through the fused kernel == the runtime's
+    einsum mix + affinity-d update (adaptive matrices as the source)."""
+    tree = {
+        "a": jnp.asarray(rng.normal(size=(K, 5, 4)), jnp.float32),
+        "b": jnp.asarray(rng.normal(size=(K, 17)), jnp.float32),
+    }
+    losses = jnp.asarray(rng.normal(size=(K,)), jnp.float32)
+    w, beta = gl.adaptive_round_matrices(
+        losses, jax.random.PRNGKey(6), data_sizes=jnp.arange(1.0, K + 1)
+    )
+    mixed_k, d_k = ops.consensus_mix_dense(tree, w, beta, T)
+    mixed_ref = cl.mix_stacked(w, tree)
+    nbr_avg = cl.mix_stacked(beta, tree)
+    has = jnp.sum(beta, axis=1) > 0
+    d_ref = jax.tree.map(
+        lambda avg, x: jnp.where(
+            has.reshape((-1,) + (1,) * (x.ndim - 1)), (avg - x) / T, 0.0
+        ),
+        nbr_avg, tree,
+    )
+    for leaf in tree:
+        np.testing.assert_allclose(
+            np.asarray(mixed_k[leaf]), np.asarray(mixed_ref[leaf]), atol=2e-6
+        )
+        np.testing.assert_allclose(
+            np.asarray(d_k[leaf]), np.asarray(d_ref[leaf]), atol=2e-6
+        )
+
+
+def test_consensus_mix_push_sum_dense_matches_protocol(rng):
+    tree = {"a": jnp.asarray(rng.normal(size=(K, 9)), jnp.float32)}
+    losses = jnp.asarray(rng.normal(size=(K,)), jnp.float32)
+    w, beta = gl.adaptive_round_matrices(
+        losses, jax.random.PRNGKey(7), rule="random", stochasticity="column",
+        data_sizes=jnp.arange(1.0, K + 1),
+    )
+    mass = jnp.asarray(K * rng.dirichlet(np.ones(K)), jnp.float32)
+    proto = protocols.get_protocol("push_sum")
+    ps_state, mixed_ref = proto.mix(
+        protocols.PushSumState(mass=mass), tree,
+        protocols.ProtocolConstants(w=w, beta=beta),
+    )
+    mixed_k, _, new_mass = ops.consensus_mix_push_sum_dense(tree, mass, w, beta, T)
+    np.testing.assert_allclose(
+        np.asarray(new_mass), np.asarray(ps_state.mass), rtol=1e-6
+    )
+    np.testing.assert_allclose(
+        np.asarray(mixed_k["a"]), np.asarray(mixed_ref["a"]), atol=2e-5
+    )
+    np.testing.assert_allclose(np.asarray(new_mass).sum(), K, rtol=1e-5)
+
+
+def test_consensus_mix_dense_traces_once_inside_jit():
+    """The dense-dynamic path composes with an outer jit computing the
+    matrices from run state — the adaptive-round usage pattern."""
+    calls = [0]
+
+    @jax.jit
+    def round_like(tree, losses, key):
+        calls[0] += 1
+        w, beta = gl.adaptive_round_matrices(losses, key)
+        return ops.consensus_mix_dense(tree, w, beta, T)
+
+    tree = {"a": jnp.ones((4, 6), jnp.float32)}
+    for i in range(3):
+        losses = jnp.arange(4, dtype=jnp.float32) * (i + 1)
+        mixed, _ = round_like(tree, losses, jax.random.PRNGKey(i))
+    assert calls[0] == 1
+    assert np.isfinite(np.asarray(mixed["a"])).all()
+
+
+def test_consensus_mix_dense_rejects_singleton():
+    with pytest.raises(ValueError, match="at least two peers"):
+        ops.consensus_mix_dense(
+            {"a": jnp.ones((1, 4))}, jnp.ones((1, 1)), jnp.zeros((1, 1)), T
+        )
+
+
+# ---------------------------------------------------------------------------
+# Config validation
+# ---------------------------------------------------------------------------
+
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="partner_rule"):
+        p2p.P2PConfig(partner_rule="nope")
+    with pytest.raises(ValueError, match="adaptive_eps"):
+        p2p.P2PConfig(adaptive_eps=1.5)
+    with pytest.raises(ValueError, match="two peers"):
+        p2p.P2PConfig(schedule="adaptive", num_peers=1)
+    with pytest.raises(ValueError, match="schedule"):
+        p2p.P2PConfig(schedule="adaptve")
+    # adaptive has no pretraced schedule to build
+    with pytest.raises(ValueError, match="adaptive"):
+        p2p.build_schedule(p2p.P2PConfig(schedule="adaptive", num_peers=2))

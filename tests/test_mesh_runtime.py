@@ -61,6 +61,10 @@ SCHEDULE_GRID = [
     ("one_way_matching", {}),
     ("random_matching", {}),
     ("peer_churn", {}),  # degree-0 rounds: churned-out peers keep their state
+    # state-dependent topology: partners picked ON DEVICE from run state each
+    # round (pod side: complete-graph candidate lanes, adaptively nulled)
+    ("adaptive", {"partner_rule": "loss_proximity"}),
+    ("adaptive", {"partner_rule": "eps_greedy"}),
 ]
 
 
@@ -139,7 +143,8 @@ def test_sharded_runtime_one_compile():
 @pytest.mark.parametrize("schedule,extra", [
     ("static", {}),
     ("round_robin", {"round_robin_topologies": ("ring", "star")}),
-], ids=["static", "round_robin"])
+    ("adaptive", {"partner_rule": "loss_proximity"}),
+], ids=["static", "round_robin", "adaptive"])
 def test_scan_driver_pod_bit_identical_to_python_loop_and_vmap(
     protocol, schedule, extra
 ):
@@ -234,6 +239,41 @@ def test_scan_driver_pod_one_compile_and_donation():
     assert traces[0] <= 2  # value + grad trace of the single compile
     assert drive._cache_size() == 1  # the jit cache agrees
     assert all(leaf.is_deleted() for leaf in jax.tree.leaves(first_state))
+
+
+@pytest.mark.mesh
+@needs_mesh
+@pytest.mark.parametrize("protocol", ["gossip", "push_sum"])
+def test_adaptive_sharded_one_compile(protocol):
+    """Adaptive partner selection inside the sharded round: the on-device
+    matching (all_gather'd loss K-vector + threaded key) keeps the
+    one-compile property — no host callback, no retrace across rounds."""
+    traces = [0]
+
+    def counting_loss(params, batch):
+        traces[0] += 1
+        return _mlp_loss(params, batch)
+
+    cfg = p2p.P2PConfig(
+        algorithm="p2pl_affinity", num_peers=K, local_steps=2,
+        consensus_steps=1, lr=0.05, eta_d=0.5, schedule="adaptive",
+        partner_rule="eps_greedy", protocol=protocol,
+    )
+    mesh = mesh_lib.make_peer_mesh(K)
+    fn = p2p.make_sharded_round_fn(counting_loss, cfg, mesh)
+    state = specs_lib.shard_peer_tree(
+        p2p.init_state(jax.random.PRNGKey(3), _init_fn, cfg), mesh
+    )
+    rng = np.random.default_rng(3)
+    for _ in range(6):
+        _, state, losses = fn(state, _round_batches(rng, cfg.local_steps))
+    assert int(state.round_idx) == 6
+    assert np.isfinite(float(jnp.mean(losses)))
+    assert traces[0] <= 2  # value + grad trace of the single compile
+    assert fn._cache_size() == 1  # the jit cache agrees
+    if protocol == "push_sum":
+        mass = np.asarray(state.protocol.mass)
+        np.testing.assert_allclose(mass.sum(), K, rtol=1e-5)
 
 
 @pytest.mark.mesh

@@ -90,6 +90,71 @@ def test_cli_round_robin_and_protocol_flags(data, capsys, monkeypatch):
     assert "done in" in capsys.readouterr().out
 
 
+def test_cli_adaptive_composes_with_scan_driver(data, capsys, monkeypatch):
+    """--schedule adaptive + --partner-rule + --adaptive-eps reach the
+    runtime and compose with --driver scan (the default production driver)."""
+    from repro.launch import train as train_mod
+
+    seen = {}
+
+    def _capture(exp, rounds=None, **kw):
+        seen["exp"], seen["kw"] = exp, kw
+        return run_paper_experiment(exp, rounds=1, data=data, **kw)
+
+    monkeypatch.setattr(train_mod, "run_paper_experiment", _capture)
+    train_mod.main([
+        "--experiment", "timevarying_k2", "--schedule", "adaptive",
+        "--partner-rule", "eps_greedy", "--adaptive-eps", "0.3",
+        "--adaptive-seed", "7", "--driver", "scan", "--rounds", "1",
+    ])
+    assert "done in" in capsys.readouterr().out
+    assert seen["exp"].p2p.schedule == "adaptive"
+    assert seen["exp"].p2p.partner_rule == "eps_greedy"
+    assert seen["exp"].p2p.adaptive_eps == 0.3
+    assert seen["exp"].p2p.adaptive_seed == 7
+    assert seen["kw"]["driver"] == "scan"
+
+
+def test_cli_rejects_unknown_partner_rule(capsys):
+    from repro.launch import train
+
+    with pytest.raises(SystemExit) as excinfo:
+        train.main(["--experiment", "timevarying_k8", "--schedule", "adaptive",
+                    "--partner-rule", "loss_proximty", "--rounds", "1"])
+    assert excinfo.value.code == 2  # argparse choices error, before any jax work
+    assert "--partner-rule" in capsys.readouterr().err
+
+
+def test_cli_rejects_out_of_range_adaptive_eps(capsys):
+    from repro.launch import train
+
+    with pytest.raises(SystemExit) as excinfo:
+        train.main(["--experiment", "timevarying_k8", "--schedule", "adaptive",
+                    "--partner-rule", "eps_greedy", "--adaptive-eps", "1.5",
+                    "--rounds", "1"])
+    assert excinfo.value.code == 2
+    assert "--adaptive-eps" in capsys.readouterr().err
+
+
+@pytest.mark.skipif(
+    __import__("jax").device_count() >= 2,
+    reason="exercises the too-few-devices CLI error (single-device env only)",
+)
+def test_cli_adaptive_pod_still_fails_fast_on_missing_devices(capsys):
+    """--schedule adaptive composes with --peer-axis pod: the device-count
+    fail-fast (with the XLA_FLAGS hint) fires before tracing, exactly as on
+    pretraced schedules."""
+    from repro.launch import train
+
+    with pytest.raises(SystemExit) as excinfo:
+        train.main(["--experiment", "sharded_k8", "--schedule", "adaptive",
+                    "--peer-axis", "pod", "--rounds", "1"])
+    assert excinfo.value.code == 2
+    err = capsys.readouterr().err
+    assert "xla_force_host_platform_device_count" in err
+    assert "num_peers=8" in err
+
+
 def test_p2p_lm_training_reduces_loss_and_drift():
     """The paper's algorithm drives a (reduced) assigned arch: loss falls,
     consensus keeps peer models close."""
