@@ -1,10 +1,11 @@
 """Benchmark orchestrator.  One function per paper figure + kernel micro-
 benches.  Prints ``name,us_per_call,derived`` CSV (see figures.py/kernels.py)
 and serializes the consensus-protocol rows to ``BENCH_protocols.json``, the
-round-loop driver rows to ``BENCH_roundloop.json``, and the adaptive
-partner-selection rows to ``BENCH_adaptive.json`` so the perf trajectories
-(spectral gap, consensus error, wall-clock per round, scan-vs-python speedup,
-oscillation damping) accumulate across PRs.  See benchmarks/README.md for the
+round-loop driver rows to ``BENCH_roundloop.json``, the adaptive
+partner-selection rows to ``BENCH_adaptive.json``, and the K-scaling rows to
+``BENCH_scaling.json`` so the perf trajectories (spectral gap, consensus
+error, wall-clock per round, scan-vs-python speedup, oscillation damping,
+sub-quadratic K-scaling) accumulate across PRs.  See benchmarks/README.md for the
 file contract.  ``--only`` with an unknown name errors out listing the
 registry (a typo used to silently run nothing).
 
@@ -43,6 +44,9 @@ def main(argv=None) -> None:
     ap.add_argument("--adaptive-json-out", default="BENCH_adaptive.json",
                     help="where to write the adaptive partner-selection "
                          "benchmark rows ('' disables)")
+    ap.add_argument("--scaling-json-out", default="BENCH_scaling.json",
+                    help="where to write the K-scaling benchmark rows "
+                         "('' disables)")
     args = ap.parse_args(argv)
 
     from benchmarks.adaptive import ALL_ADAPTIVE
@@ -50,11 +54,12 @@ def main(argv=None) -> None:
     from benchmarks.kernels import ALL_KERNELS
     from benchmarks.peer_axis import ALL_PEER_AXIS
     from benchmarks.protocols import ALL_PROTOCOLS
-    from benchmarks.roundloop import ALL_ROUNDLOOP
+    from benchmarks.roundloop import ALL_ROUNDLOOP, ALL_SCALING
     from benchmarks.schedules import ALL_SCHEDULES
 
     benches = {**ALL_KERNELS, **ALL_FIGURES, **ALL_SCHEDULES, **ALL_PROTOCOLS,
-               **ALL_PEER_AXIS, **ALL_ROUNDLOOP, **ALL_ADAPTIVE}
+               **ALL_PEER_AXIS, **ALL_ROUNDLOOP, **ALL_ADAPTIVE,
+               **ALL_SCALING}
     only = set(args.only.split(",")) if args.only else None
     if only:
         # a typo'd --only used to silently run NOTHING (and exit 0) — fail
@@ -69,6 +74,7 @@ def main(argv=None) -> None:
     protocol_rows = []
     roundloop_rows = []
     adaptive_rows = []
+    scaling_rows = []
     print("name,us_per_call,derived")
     for name, fn in benches.items():
         if only and name not in only:
@@ -87,6 +93,8 @@ def main(argv=None) -> None:
                 roundloop_rows += rows
             if name in ALL_ADAPTIVE:
                 adaptive_rows += rows
+            if name in ALL_SCALING:
+                scaling_rows += rows
         except Exception:  # noqa: BLE001
             failures += 1
             print(f"{name},ERROR,0", flush=True)
@@ -104,6 +112,15 @@ def main(argv=None) -> None:
             _write_rows(args.roundloop_json_out, roundloop_rows, "roundloop")
     if args.adaptive_json_out:
         _write_rows(args.adaptive_json_out, adaptive_rows, "adaptive")
+    if args.scaling_json_out:
+        if any("SKIPPED" in row["name"] for row in scaling_rows):
+            # a <8-device run has no scaling cells: writing it would clobber
+            # a committed baseline with a file the CI gate can never match
+            print(f"NOT writing {args.scaling_json_out}: scaling rows were "
+                  "SKIPPED (need 8 devices — set XLA_FLAGS="
+                  "--xla_force_host_platform_device_count=8)", file=sys.stderr)
+        else:
+            _write_rows(args.scaling_json_out, scaling_rows, "scaling")
     if failures:
         sys.exit(1)
 

@@ -15,7 +15,14 @@ from repro.configs import (
     smollm_135m,
     zamba2_2_7b,
 )
-from repro.configs.base import INPUT_SHAPES, AttentionConfig, ModelConfig, MoEConfig, ShapeConfig, SSMConfig
+from repro.configs.base import (
+    INPUT_SHAPES,
+    AttentionConfig,
+    ModelConfig,
+    MoEConfig,
+    ShapeConfig,
+    SSMConfig,
+)
 
 ARCHITECTURES = {
     "rwkv6-7b": rwkv6_7b.config,

@@ -150,7 +150,8 @@ class ModelConfig:
             )
             total += l * (per_mamba + 2 * d)
             if self.shared_block_period:
-                total += 2 * d * d + per_layer_attn + 3 * d * self.d_ff  # shared block (+concat proj)
+                # shared block (+concat proj)
+                total += 2 * d * d + per_layer_attn + 3 * d * self.d_ff
             return int(total)
         per_layer_mlp = 3 * d * self.d_ff if self.act != "relu" else 2 * d * self.d_ff
         n_dec = l

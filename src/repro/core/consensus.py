@@ -110,6 +110,98 @@ def mix_sparse(
 
 
 # ---------------------------------------------------------------------------
+# Hierarchical (vmap-within-device x shard_map) forms
+# ---------------------------------------------------------------------------
+
+
+def scatter_rows(
+    nbr_idx: jax.Array,  # (p, D) int32 — global column indices per row
+    nbr_w: jax.Array,  # (p, D) f32 — weights (0.0 at padding slots)
+    num_peers: int,
+    *,
+    row_ids: jax.Array | None = None,  # (p,) global row indices
+    self_w: jax.Array | None = None,  # (p,) diagonal values, if any
+) -> jax.Array:
+    """Scatter padded sparse rows into a dense (p, K) weight block.
+
+    The bridge between the degree-bounded ``graph.SparseSchedule`` operands
+    and the dense row einsum: real slots place their weight at (row, idx);
+    padding slots (idx == the row's own global index, weight 0.0) add +-0.0
+    onto the diagonal entry, so the result equals the dense matrix block the
+    sparse rows were extracted from — bit for bit, which is what lets the
+    hierarchical runtime's K <= 64 "bridge" mode keep fp32 parity with the
+    dense runtimes.
+    """
+    p = nbr_idx.shape[0]
+    rows = jnp.arange(p, dtype=jnp.int32)
+    block = jnp.zeros((p, num_peers), jnp.float32)
+    if self_w is not None:
+        if row_ids is None:
+            raise ValueError("self_w placement needs the global row_ids")
+        block = block.at[rows, row_ids].set(self_w.astype(jnp.float32))
+    return block.at[rows[:, None], nbr_idx].add(nbr_w.astype(jnp.float32))
+
+
+def ring_gather_slots(
+    x_block: jax.Array,  # (p, ...) this device's contiguous block of rows
+    nbr_idx: jax.Array,  # (p, D) int32 GLOBAL neighbor indices
+    axis_name: str,
+    num_devices: int,
+) -> jax.Array:
+    """Gather neighbor rows by global index across a block-sharded peer axis.
+
+    Peers live block-major on the mesh: global row g sits on device g // p at
+    local slot g % p.  The device's block streams around the ring — step s
+    holds device (me + s)'s block after s ppermutes — and each step fills the
+    slots whose owner just arrived, via a LOCAL take.  Returns (p, D, ...):
+    per-device memory O(p * D * feat) and total traffic O(K * feat) per
+    device, never a (K, ...) or (K, K) intermediate — the segment-mode
+    communication primitive for fleets too large to all-gather.
+    """
+    p = x_block.shape[0]
+    me = jax.lax.axis_index(axis_name)
+    owner = nbr_idx // p  # (p, D) device holding each neighbor
+    local = nbr_idx % p
+    feat_dims = (1,) * (x_block.ndim - 1)
+    perm = [(i, (i - 1) % num_devices) for i in range(num_devices)]
+    visiting = x_block
+    out = jnp.zeros(nbr_idx.shape + x_block.shape[1:], x_block.dtype)
+    for s in range(num_devices):
+        src = jax.lax.rem(me + s, num_devices)
+        take = visiting[local]  # (p, D, ...)
+        out = jnp.where((owner == src).reshape(owner.shape + feat_dims), take, out)
+        if s + 1 < num_devices:
+            visiting = jax.lax.ppermute(visiting, axis_name, perm=perm)
+    return out
+
+
+def mix_slots(
+    self_w: jax.Array,  # (p,)
+    nbr_w: jax.Array,  # (p, D)
+    x_block: jax.Array,  # (p, ...)
+    gathered: jax.Array,  # (p, D, ...) from ring_gather_slots
+) -> jax.Array:
+    """Segment-sum mix over gathered neighbor slots:
+    out_i = self_w[i] * x_i + sum_d nbr_w[i, d] * gathered[i, d].
+    f32 accumulation, cast back — the jnp twin of the Pallas segment kernel
+    (kernels/consensus_mix/segment.py); O(p * D * feat), no (K, K)."""
+    xf = x_block.astype(jnp.float32)
+    gf = gathered.astype(jnp.float32)
+    sw = self_w.reshape((-1,) + (1,) * (x_block.ndim - 1))
+    bw = nbr_w.reshape(nbr_w.shape + (1,) * (x_block.ndim - 1))
+    out = sw * xf + jnp.sum(bw * gf, axis=1)
+    return out.astype(x_block.dtype)
+
+
+def slot_sum(nbr_w: jax.Array, gathered: jax.Array) -> jax.Array:
+    """Weighted slot reduction without the self term (affinity-beta form):
+    out_i = sum_d nbr_w[i, d] * gathered[i, d], f32, cast back."""
+    gf = gathered.astype(jnp.float32)
+    bw = nbr_w.reshape(nbr_w.shape + (1,) * (gathered.ndim - 2))
+    return jnp.sum(bw * gf, axis=1).astype(gathered.dtype)
+
+
+# ---------------------------------------------------------------------------
 # Mesh-collective forms (inside shard_map over the peer axis)
 # ---------------------------------------------------------------------------
 

@@ -630,6 +630,245 @@ def consensus_phase_sharded(
     )
 
 
+MIX_MODES = ("auto", "bridge", "segment")
+_BRIDGE_MAX_PEERS = 64  # "auto" uses the bit-parity bridge mix up to here
+
+
+def consensus_phase_hier(
+    state: P2PState,
+    cfg: P2PConfig,
+    *,
+    axis_name: str,
+    num_devices: int,
+    mix_mode: str,
+    ops: protocols_lib.SparseRoundOps | None = None,
+    dense_consts: protocols_lib.ProtocolConstants | None = None,
+) -> P2PState:
+    """``consensus_phase`` inside a shard_map block holding a (p, ...) BLOCK
+    of peers (p = K / devices > 1) — the hierarchical runtime's mix.
+
+    Two modes, selected by ``mix_mode``:
+
+    "bridge" (K <= 64): per leaf, all-gather the (K, ...) stack and run the
+    SAME full dense einsum the stacked runtime runs — ``dense_consts`` is the
+    round's (K, K) slice scattered back losslessly from the sparse schedule
+    (``graph.SparseSchedule.to_dense``) — then keep this device's p rows.
+    Slicing AFTER the reduction preserves every bit; (p, K)-row forms of the
+    matvec leaves (scalar parameters, the push-sum mass) reduce in a
+    different order and drift by an ulp.  Each device duplicates the full
+    K x K mix, which is exactly the regime's point: K <= 64 makes the
+    duplicated flops irrelevant next to fp32 bit-identity with the vmap and
+    pod runtimes.
+
+    "segment" (large K): per leaf, ring-stream the peer blocks across the
+    mesh and keep only this block's (p, D, ...) neighbor slots
+    (``consensus.ring_gather_slots``), then segment-sum with the sparse
+    ``ops`` (the round's degree-bounded ``SparseRoundOps``, replicated —
+    K*D floats, tiny next to parameters even at K = 4096).  Peak per-device
+    consensus memory is O(K * D * feat / devices) and traffic O(K * feat)
+    per device — no (K, K), no (K, feat) — at the cost of bitwise parity
+    (degree-bounded sums reduce in slot order; results are allclose to
+    dense, not bit-identical).
+    """
+    if cfg.consensus_steps == 0:
+        return state._replace(round_idx=state.round_idx + 1)
+
+    proto = protocols_lib.get_protocol(cfg.protocol)
+    p = jax.tree.leaves(state.params)[0].shape[0]
+    my = jax.lax.axis_index(axis_name)
+    row0 = (my * p).astype(jnp.int32)
+
+    if mix_mode == "bridge":
+        if dense_consts is None:
+            raise ValueError("bridge mode needs dense_consts (round (K, K) slice)")
+        beta_r = dense_consts.beta  # (K, K) f32
+        has_nbrs = jax.lax.dynamic_slice_in_dim(
+            jnp.sum(beta_r, axis=1) > 0, row0, p, axis=0
+        )  # (p,)
+        begin_kwargs = dict(dense_w=dense_consts.w, row0=row0, block_size=p)
+
+        def view(x):
+            return jax.lax.all_gather(x, axis_name, axis=0, tiled=True)
+
+        def nbr_avg_fn(x_view):
+            full = consensus_lib.mix_leaf(beta_r, x_view)  # (K, ...)
+            return jax.lax.dynamic_slice_in_dim(full, row0, p, axis=0)
+
+    elif mix_mode == "segment":
+        if ops is None:
+            raise ValueError("segment mode needs ops (round SparseRoundOps)")
+        blk = protocols_lib.SparseRoundOps(
+            *(jax.lax.dynamic_slice_in_dim(o, row0, p, axis=0) for o in ops)
+        )
+        has_nbrs = jnp.sum(blk.beta, axis=1) > 0  # (p,)
+        begin_kwargs = dict(ops_block=blk)
+
+        def view(x):
+            return consensus_lib.ring_gather_slots(
+                x, blk.nbr_idx, axis_name, num_devices
+            )
+
+        def nbr_avg_fn(x_view):
+            return consensus_lib.slot_sum(blk.beta, x_view)
+
+    else:
+        raise ValueError(f"unknown mix_mode {mix_mode!r}; 'bridge' or 'segment'")
+
+    params, d_bias, proto_state = state.params, state.d_bias, state.protocol
+    b_bias_leaves = jax.tree.leaves(state.b_bias)
+    for _ in range(cfg.consensus_steps):
+        proto_state, ctx = proto.mix_hier_begin(
+            proto_state, mode=mix_mode, axis_name=axis_name,
+            num_devices=num_devices, **begin_kwargs,
+        )
+        leaves, treedef = jax.tree.flatten(params)
+        mixed_leaves, d_leaves = [], []
+        for i, x in enumerate(leaves):
+            x_view = view(x)
+            d_i = None
+            if cfg.use_affinity_d:
+                # d_k <- (1/T) sum_j beta_kj (w_j - w_k); isolated peers
+                # (all-zero beta row this round) keep d = 0
+                avg = nbr_avg_fn(x_view)
+                d_i = jnp.where(
+                    has_nbrs.reshape((-1,) + (1,) * (x.ndim - 1)),
+                    (avg - x) / cfg.local_steps,
+                    jnp.zeros_like(x),
+                )
+            m_i = proto.mix_hier_leaf(ctx, x, x_view)
+            if cfg.use_affinity_b:
+                m_i = m_i + cfg.eta_b * b_bias_leaves[i]
+            mixed_leaves.append(m_i)
+            d_leaves.append(d_i)
+        params = jax.tree.unflatten(treedef, mixed_leaves)
+        if cfg.use_affinity_d:
+            d_bias = jax.tree.unflatten(treedef, d_leaves)
+
+    return state._replace(
+        params=params, d_bias=d_bias, protocol=proto_state,
+        round_idx=state.round_idx + 1,
+    )
+
+
+def _make_hier_round_step(
+    loss_fn: LossFn,
+    cfg: P2PConfig,
+    data_sizes: np.ndarray | None = None,
+    *,
+    mesh,
+    axis_name: str,
+    peers_per_device: int,
+    mix_mode: str = "auto",
+):
+    """The hierarchical (vmap-within-device x shard_map) round step:
+    ``peers_per_device`` peers share each mesh slice, decoupling K from the
+    device count — K = 4096 runs on an 8-device mesh with 512 peers each.
+
+    The local phase is the SAME ``_local_phase_stats`` scan (vmap over the
+    (p, ...) block instead of the full (K, ...) stack — bit-identical rows),
+    and the consensus phase is ``consensus_phase_hier`` over the round's
+    degree-bounded ``graph.SparseSchedule`` operands.
+    """
+    from repro.sharding import specs as specs_lib
+
+    if cfg.schedule == "adaptive":
+        raise ValueError(
+            "schedule='adaptive' is not supported on the hierarchical "
+            "(peers_per_device > 1) runtime: its candidate lane set is the "
+            "complete graph — O(K^2) by construction — which is exactly what "
+            "the sparse degree-bounded path exists to avoid; run adaptive "
+            "schedules with one peer per device, or a pretraced schedule here"
+        )
+    if mix_mode not in MIX_MODES:
+        raise ValueError(f"unknown mix_mode {mix_mode!r}; one of {MIX_MODES}")
+    num_devices, _ = specs_lib.hierarchical_layout(
+        cfg.num_peers, mesh, peer_axis=axis_name,
+        peers_per_device=peers_per_device,
+    )
+    mode = mix_mode
+    if mode == "auto":
+        mode = "bridge" if cfg.num_peers <= _BRIDGE_MAX_PEERS else "segment"
+
+    proto = protocols_lib.get_protocol(cfg.protocol)
+    sched = build_schedule(cfg)
+    if sched.directed and not proto.directed_capable:
+        warnings.warn(
+            f"protocol {cfg.protocol!r} on a directed schedule "
+            f"({sched.name!r}): a row-stochastic consensus point is biased on "
+            "asymmetric graphs — use protocol='push_sum' unless the bias is "
+            "deliberate",
+            stacklevel=2,
+        )
+    sparse = graph_lib.SparseSchedule.from_schedule(
+        sched, cfg.mixing, data_sizes=data_sizes,
+        consensus_step_size=cfg.consensus_step_size,
+        stochasticity=proto.stochasticity,
+    )
+    period = sparse.period
+    shard_map = _shard_map_fn()
+    from jax.sharding import PartitionSpec as P
+
+    if mode == "bridge":
+        # Lossless densification: the bridge mix replays the stacked
+        # runtime's full (K, K) einsums and slices this device's rows, so it
+        # wants the round constants in exactly the stacked runtime's form.
+        w_np, beta_np = sparse.to_dense()
+        w_s = jnp.asarray(w_np, jnp.float32)  # (R, K, K)
+        beta_s = jnp.asarray(beta_np, jnp.float32)
+
+        def block(state: P2PState, batches: PyTree, w, bt):
+            after_local, losses = local_phase(
+                state, loss_fn, batches, cfg, axis_name=axis_name
+            )
+            idx = jax.lax.rem(state.round_idx, jnp.int32(period))
+            after_cons = consensus_phase_hier(
+                after_local, cfg,
+                axis_name=axis_name, num_devices=num_devices, mix_mode=mode,
+                dense_consts=protocols_lib.ProtocolConstants(w=w[idx], beta=bt[idx]),
+            )
+            return after_local, after_cons, losses
+
+        extra_args = (w_s, beta_s)
+        extra_specs = (P(None, None, None), P(None, None, None))
+    else:
+        # stacked (R, ...) degree-bounded operands — R*K*D floats, replicated
+        self_w_s = jnp.asarray(sparse.self_w, jnp.float32)
+        nbr_idx_s = jnp.asarray(sparse.nbr_idx, jnp.int32)
+        nbr_w_s = jnp.asarray(sparse.nbr_w, jnp.float32)
+        beta_s = jnp.asarray(sparse.beta, jnp.float32)
+
+        def block(state: P2PState, batches: PyTree, sw, ni, nw, bt):
+            after_local, losses = local_phase(
+                state, loss_fn, batches, cfg, axis_name=axis_name
+            )
+            idx = jax.lax.rem(state.round_idx, jnp.int32(period))
+            after_cons = consensus_phase_hier(
+                after_local, cfg,
+                axis_name=axis_name, num_devices=num_devices, mix_mode=mode,
+                ops=protocols_lib.SparseRoundOps(sw[idx], ni[idx], nw[idx], bt[idx]),
+            )
+            return after_local, after_cons, losses
+
+        extra_args = (self_w_s, nbr_idx_s, nbr_w_s, beta_s)
+        extra_specs = (
+            P(None, None), P(None, None, None),
+            P(None, None, None), P(None, None, None),
+        )
+
+    def step(state: P2PState, batches: PyTree):
+        s_specs = specs_lib.peer_stacked_pspecs(state, peer_axis=axis_name)
+        b_specs = specs_lib.peer_batch_pspecs(batches, peer_axis=axis_name)
+        mapped = shard_map(
+            block,
+            mesh=mesh,
+            in_specs=(s_specs, b_specs) + extra_specs,
+            out_specs=(s_specs, s_specs, P(None)),
+        )
+        return mapped(state, batches, *extra_args)
+
+    return step
+
+
 def _make_round_step(
     loss_fn: LossFn,
     cfg: P2PConfig,
@@ -637,6 +876,8 @@ def _make_round_step(
     *,
     mesh=None,
     axis_name: str = "pod",
+    peers_per_device: int | None = None,
+    mix_mode: str = "auto",
 ):
     """The UNJITTED (state, batches) -> (after_local, after_consensus, losses)
     round step shared by every driver.
@@ -655,7 +896,18 @@ def _make_round_step(
     this round's per-peer mean losses and the advanced key for the next
     round.  Still one compile per run — the selection is ordinary traced
     arithmetic, not a host callback.
+
+    ``peers_per_device > 1`` (mesh required) builds the HIERARCHICAL step
+    instead (``_make_hier_round_step``): p = K / devices peers vmapped within
+    each mesh slice, sparse degree-bounded consensus across slices.
     """
+    if peers_per_device is not None and peers_per_device != 1:
+        if mesh is None:
+            raise ValueError("peers_per_device > 1 needs a mesh (hierarchical runtime)")
+        return _make_hier_round_step(
+            loss_fn, cfg, data_sizes, mesh=mesh, axis_name=axis_name,
+            peers_per_device=peers_per_device, mix_mode=mix_mode,
+        )
     adaptive = cfg.schedule == "adaptive"
     proto = protocols_lib.get_protocol(cfg.protocol)
     sizes_dev = (
@@ -815,6 +1067,8 @@ def make_sharded_round_fn(
     data_sizes: np.ndarray | None = None,
     *,
     axis_name: str = "pod",
+    peers_per_device: int | None = None,
+    mix_mode: str = "auto",
 ):
     """jit-compiled round over a REAL mesh: one peer replica per mesh slice.
 
@@ -830,9 +1084,18 @@ def make_sharded_round_fn(
     State/batch placement: any input works (jit reshards), but steady-state
     runs should place the state with ``sharding.specs.shard_peer_tree`` to
     avoid a per-round host transfer.
+
+    ``peers_per_device > 1`` selects the hierarchical runtime: p = K /
+    mesh-axis-size peers vmapped inside each slice, consensus over the
+    degree-bounded sparse schedule (``mix_mode``: "auto" picks the bit-parity
+    "bridge" mix for K <= 64 and the O(K * D / devices)-memory "segment" mix
+    beyond — see ``consensus_phase_hier``).
     """
     return jax.jit(
-        _make_round_step(loss_fn, cfg, data_sizes, mesh=mesh, axis_name=axis_name)
+        _make_round_step(
+            loss_fn, cfg, data_sizes, mesh=mesh, axis_name=axis_name,
+            peers_per_device=peers_per_device, mix_mode=mix_mode,
+        )
     )
 
 
@@ -854,6 +1117,8 @@ def make_scan_driver(
     *,
     mesh=None,
     axis_name: str = "pod",
+    peers_per_device: int | None = None,
+    mix_mode: str = "auto",
     donate: bool = True,
 ):
     """Fused multi-round driver: a whole chunk of rounds per jitted call.
@@ -882,7 +1147,10 @@ def make_scan_driver(
     each distinct C compiles once (drive with ONE chunk size per run to keep
     the one-compile property).
     """
-    step = _make_round_step(loss_fn, cfg, data_sizes, mesh=mesh, axis_name=axis_name)
+    step = _make_round_step(
+        loss_fn, cfg, data_sizes, mesh=mesh, axis_name=axis_name,
+        peers_per_device=peers_per_device, mix_mode=mix_mode,
+    )
 
     def drive(state: P2PState, batches: PyTree):
         def body(carry, batches_r):

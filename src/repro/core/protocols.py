@@ -72,6 +72,22 @@ class PushSumState(NamedTuple):
     mass: jax.Array  # (K,) f32
 
 
+class SparseRoundOps(NamedTuple):
+    """One round of ``graph.SparseSchedule`` on device: the degree-bounded
+    mixing operands the hierarchical runtime consumes.
+
+    Full-K form (replicated across the mesh) or a device's row block — the
+    leading axis is K or K/devices accordingly.  ``nbr_idx`` holds GLOBAL
+    peer indices either way; padding slots point at the row's own index with
+    weight 0.0.
+    """
+
+    self_w: jax.Array  # (K,) f32 — diagonal of W (row) / A (column)
+    nbr_idx: jax.Array  # (K, D) int32 — in-neighbor global indices
+    nbr_w: jax.Array  # (K, D) f32 — off-diagonal weights
+    beta: jax.Array  # (K, D) f32 — affinity weights
+
+
 class ConsensusProtocol:
     """Interface of one consensus-step rule over stacked (K, ...) parameters."""
 
@@ -148,6 +164,51 @@ class ConsensusProtocol:
         """
         raise NotImplementedError
 
+    def mix_hier_begin(
+        self,
+        proto_state: PyTree,
+        *,
+        mode: str,
+        axis_name: str,
+        num_devices: int,
+        dense_w: jax.Array | None = None,
+        row0: jax.Array | None = None,
+        block_size: int | None = None,
+        ops_block: "SparseRoundOps | None" = None,
+    ) -> tuple[PyTree, Any]:
+        """Per-consensus-step setup of the HIERARCHICAL mix (vmap-within-
+        device x shard_map), run once per step.
+
+        ``mode`` selects the operand form and the neighbor-view convention
+        that ``mix_hier_leaf`` will receive:
+
+          "bridge"  — ``dense_w`` is the round's full (K, K) matrix
+                      (losslessly densified from the sparse schedule),
+                      ``row0``/``block_size`` this device's row window.
+                      x_view is the all-gathered (K, ...) stack; the mix
+                      replays the stacked runtime's FULL dense einsum and
+                      slices this device's rows after the reduction — fp32
+                      bit-identical to the stacked runtime (the K <= 64
+                      lossless-conversion regime).
+          "segment" — ``ops_block`` is this device's (K/devices)-row slice
+                      of the round's ``SparseRoundOps``.  x_view is the
+                      ring-gathered (p, D, ...) neighbor slots
+                      (``consensus.ring_gather_slots``); the mix is a
+                      weighted segment sum, O(K * D * feat / devices) memory
+                      with no (K, K) or (K, feat) intermediate — the large-K
+                      path (allclose to dense, not bitwise).
+        """
+        raise NotImplementedError(
+            f"protocol {self.name!r} does not implement the hierarchical "
+            "(peers_per_device > 1) mix"
+        )
+
+    def mix_hier_leaf(self, ctx, x_block: jax.Array, x_view: jax.Array) -> jax.Array:
+        """One leaf of the hierarchical mix: this device's (p, ...) block of
+        ``mix``'s output, from the block itself plus the mode's neighbor view
+        (see ``mix_hier_begin``)."""
+        raise NotImplementedError
+
     def mix_sharded(
         self,
         proto_state: PyTree,
@@ -220,6 +281,33 @@ class GossipProtocol(ConsensusProtocol):
     def mix_sharded_leaf(self, ctx, x_block: jax.Array, x_full: jax.Array) -> jax.Array:
         # this peer's (1, K) x (K, ...) row of the stacked path's einsum
         return consensus_lib.mix_leaf(ctx, x_full)
+
+    def mix_hier_begin(
+        self,
+        proto_state: PyTree,
+        *,
+        mode: str,
+        axis_name: str,
+        num_devices: int,
+        dense_w: jax.Array | None = None,
+        row0: jax.Array | None = None,
+        block_size: int | None = None,
+        ops_block: "SparseRoundOps | None" = None,
+    ) -> tuple[PyTree, Any]:
+        if mode == "bridge":
+            return proto_state, ("bridge", (dense_w, row0, block_size))
+        return proto_state, ("segment", (ops_block.self_w, ops_block.nbr_w))
+
+    def mix_hier_leaf(self, ctx, x_block: jax.Array, x_view: jax.Array) -> jax.Array:
+        tag, payload = ctx
+        if tag == "bridge":
+            # the stacked runtime's FULL (K, K) x (K, ...) einsum, then this
+            # device's rows — slicing after the reduction keeps the bits
+            w_mat, row0, p = payload
+            full = consensus_lib.mix_leaf(w_mat, x_view)
+            return jax.lax.dynamic_slice_in_dim(full, row0, p, axis=0)
+        self_w, nbr_w = payload
+        return consensus_lib.mix_slots(self_w, nbr_w, x_block, x_view)
 
 
 class PushSumProtocol(ConsensusProtocol):
@@ -321,6 +409,75 @@ class PushSumProtocol(ConsensusProtocol):
         )
         out = num / y_new.reshape((-1,) + (1,) * (x_full.ndim - 1))
         return out.astype(x_block.dtype)
+
+    def mix_hier_begin(
+        self,
+        proto_state: PushSumState,
+        *,
+        mode: str,
+        axis_name: str,
+        num_devices: int,
+        dense_w: jax.Array | None = None,
+        row0: jax.Array | None = None,
+        block_size: int | None = None,
+        ops_block: "SparseRoundOps | None" = None,
+    ) -> tuple[PushSumState, Any]:
+        y = proto_state.mass.astype(jnp.float32)  # (p,) this device's masses
+        if mode == "bridge":
+            # Replay ``mix``'s FULL (K, K) x (K,) mass matvec on the gathered
+            # masses and keep this device's rows — same reason the pod
+            # runtime does (see ``mix_sharded_begin``): any narrower dot
+            # reduces in a different order than the stacked matvec.  Bridge
+            # mode is the K <= 64 parity regime, where the full (K, K) A is
+            # exactly the dense path's footprint.
+            a = dense_w.astype(jnp.float32)  # (K, K)
+            y_full = jax.lax.all_gather(y, axis_name, axis=0, tiled=True)  # (K,)
+            y_new_all = jnp.einsum(
+                "kj,j->k", a, y_full, precision=jax.lax.Precision.HIGHEST
+            )
+            y_new = jax.lax.dynamic_slice_in_dim(
+                y_new_all, row0, block_size, axis=0
+            )
+            return (
+                PushSumState(mass=y_new),
+                ("bridge", (a, y_full, y_new_all, row0, block_size)),
+            )
+        # segment: the (p, D) sender masses ride the same ring as the
+        # parameter slots; weights pre-scaled by the sender's mass turn the
+        # leaf mix into the push-sum numerator sum (the mass-lane trick of
+        # kernels/consensus_mix/ops.py, block-sharded)
+        y_slots = consensus_lib.ring_gather_slots(
+            y, ops_block.nbr_idx, axis_name, num_devices
+        )  # (p, D)
+        self_w_y = ops_block.self_w * y
+        nbr_w_y = ops_block.nbr_w * y_slots
+        y_new = self_w_y + jnp.sum(nbr_w_y, axis=1)
+        return PushSumState(mass=y_new), ("segment", (self_w_y, nbr_w_y, y_new))
+
+    def mix_hier_leaf(self, ctx, x_block: jax.Array, x_view: jax.Array) -> jax.Array:
+        tag, payload = ctx
+        feat = (1,) * (x_block.ndim - 1)
+        if tag == "bridge":
+            # ``mix``'s full-K expression, operation for operation, then this
+            # device's rows (the divide is elementwise — slicing after it is
+            # exact)
+            a, y_full, y_new_all, row0, p = payload
+            xf = x_view.astype(jnp.float32)
+            biased = xf * y_full.reshape((-1,) + feat)
+            num = jnp.einsum(
+                "kj,j...->k...", a, biased, precision=jax.lax.Precision.HIGHEST
+            )
+            out = num / y_new_all.reshape((-1,) + feat)
+            return jax.lax.dynamic_slice_in_dim(out, row0, p, axis=0).astype(
+                x_block.dtype
+            )
+        self_w_y, nbr_w_y, y_new = payload
+        xf = x_block.astype(jnp.float32)
+        slots = x_view.astype(jnp.float32)  # (p, D, ...)
+        num = self_w_y.reshape((-1,) + feat) * xf + jnp.sum(
+            nbr_w_y.reshape(nbr_w_y.shape + feat) * slots, axis=1
+        )
+        return (num / y_new.reshape((-1,) + feat)).astype(x_block.dtype)
 
 
 # ---------------------------------------------------------------------------

@@ -17,11 +17,16 @@ def iid_partition(
 ) -> list[tuple[np.ndarray, np.ndarray]]:
     rng = np.random.default_rng(seed)
     idx = rng.permutation(len(x))
-    n_per = len(x) // num_peers
-    return [
-        (x[idx[k * n_per : (k + 1) * n_per]], y[idx[k * n_per : (k + 1) * n_per]])
-        for k in range(num_peers)
-    ]
+    # len(x) % num_peers samples go one-each to the first peers, so the union
+    # of the parts is the whole dataset (data-weighted mixing sums to N).
+    n_per, extra = divmod(len(x), num_peers)
+    out = []
+    start = 0
+    for k in range(num_peers):
+        stop = start + n_per + (1 if k < extra else 0)
+        out.append((x[idx[start:stop]], y[idx[start:stop]]))
+        start = stop
+    return out
 
 
 def pathological_partition(
@@ -38,6 +43,14 @@ def pathological_partition(
     "all samples from classes ..."); an int takes that many (Fig. 3 uses 50).
     """
     rng = np.random.default_rng(seed)
+    present = np.unique(y)
+    for classes in peer_classes:
+        for c in classes:
+            if c not in present:
+                raise ValueError(
+                    f"peer_classes references class {c!r} which does not occur "
+                    f"in y (present classes: {present.tolist()})"
+                )
     out = []
     for classes in peer_classes:
         xs, ys = [], []
@@ -57,6 +70,11 @@ def pathological_partition(
 def dirichlet_partition(
     x: np.ndarray, y: np.ndarray, num_peers: int, *, alpha: float = 0.5, seed: int = 0
 ) -> list[tuple[np.ndarray, np.ndarray]]:
+    if len(x) < num_peers:
+        raise ValueError(
+            f"dirichlet_partition needs at least one sample per peer: "
+            f"len(x)={len(x)} < num_peers={num_peers}"
+        )
     rng = np.random.default_rng(seed)
     classes = np.unique(y)
     peer_idx: list[list[int]] = [[] for _ in range(num_peers)]
@@ -66,6 +84,18 @@ def dirichlet_partition(
         cuts = (np.cumsum(props) * len(idx)).astype(int)[:-1]
         for k, part in enumerate(np.split(idx, cuts)):
             peer_idx[k].extend(part.tolist())
+    # Small alpha concentrates each class on one peer, and the integer cuts
+    # above can collide outright — either way a peer can end up empty.  An
+    # empty peer is a zero row in the data-weighted mixing matrix and a NaN
+    # factory in the n_p/(n_k+n_p) affinity terms, so rebalance: move one
+    # sample from the currently-largest peer until every peer has >= 1.
+    sizes = np.asarray([len(p) for p in peer_idx])
+    while (sizes == 0).any():
+        dst = int(np.argmin(sizes))
+        src = int(np.argmax(sizes))
+        peer_idx[dst].append(peer_idx[src].pop())
+        sizes[dst] += 1
+        sizes[src] -= 1
     out = []
     for k in range(num_peers):
         sel = rng.permutation(np.asarray(peer_idx[k], dtype=int))

@@ -26,3 +26,45 @@ def consensus_mix_ref(x, nbrs, w_self, w_nbr, beta, local_steps: int):
         jnp.zeros_like(xf),
     )
     return mixed.astype(x.dtype), d_bias.astype(x.dtype)
+
+
+def segment_mix_ref(flat, w_mat, beta_mat, local_steps: int):
+    """Dense oracle for the segment (edge-list) kernel, gossip form.
+
+    flat: (K, N) every peer's flattened parameters; w_mat, beta_mat: dense
+    (K, K).  The (K, K) einsum the kernel exists to avoid — the ground truth
+    it must be allclose to (slot-ordered sums are not bit-identical).
+    """
+    xf = flat.astype(jnp.float32)
+    w = w_mat.astype(jnp.float32)
+    b = beta_mat.astype(jnp.float32)
+    mixed = jnp.einsum("kj,jn->kn", w, xf)
+    nbr_avg = jnp.einsum("kj,jn->kn", b, xf)
+    has_nbrs = jnp.sum(b, axis=1) > 0.0
+    d_bias = jnp.where(
+        has_nbrs[:, None], (nbr_avg - xf) / local_steps, jnp.zeros_like(xf)
+    )
+    return mixed.astype(flat.dtype), d_bias.astype(flat.dtype)
+
+
+def segment_mix_push_sum_ref(flat, mass, a_mat, beta_mat, local_steps: int):
+    """Dense oracle for the segment kernel, push-sum form.
+
+    flat: (K, N) DE-BIASED parameters; mass: (K,); a_mat: dense
+    column-stochastic (K, K).  Mirrors ``protocols.PushSumProtocol.mix``
+    plus the affinity-d update of the raw (pre-bias) neighbor estimates.
+    Returns (debiased, d_bias, new_mass).
+    """
+    xf = flat.astype(jnp.float32)
+    a = a_mat.astype(jnp.float32)
+    b = beta_mat.astype(jnp.float32)
+    y = mass.astype(jnp.float32)
+    y_new = jnp.einsum("kj,j->k", a, y)
+    num = jnp.einsum("kj,jn->kn", a, xf * y[:, None])
+    debiased = num / y_new[:, None]
+    nbr_avg = jnp.einsum("kj,jn->kn", b, xf)
+    has_nbrs = jnp.sum(b, axis=1) > 0.0
+    d_bias = jnp.where(
+        has_nbrs[:, None], (nbr_avg - xf) / local_steps, jnp.zeros_like(xf)
+    )
+    return debiased.astype(flat.dtype), d_bias.astype(flat.dtype), y_new

@@ -150,7 +150,10 @@ def _trip_count(while_op: Op, cond: Computation | None, enclosing: Computation) 
         if best > 1:
             return best
     table = {op.name: op for op in enclosing.ops}
-    args = _OPERANDS_RE.findall(while_op.line.split("(", 1)[1].split(")")[0]) if "(" in while_op.line else []
+    args = (
+        _OPERANDS_RE.findall(while_op.line.split("(", 1)[1].split(")")[0])
+        if "(" in while_op.line else []
+    )
     best = 0
     for a in args:
         init = table.get(a)
@@ -173,9 +176,11 @@ def _trip_count(while_op: Op, cond: Computation | None, enclosing: Computation) 
         _first_shape_dims(m.group(0))
         for m in _SHAPE_RE.finditer(while_op.result_shape)
     ]
-    lead = max((d[0] for d in
-                (_first_shape_dims(f"{t}[{dd}]") for t, dd in _SHAPE_RE.findall(while_op.result_shape))
-                if d and len(d) >= 2), default=1)
+    shapes = (
+        _first_shape_dims(f"{t}[{dd}]")
+        for t, dd in _SHAPE_RE.findall(while_op.result_shape)
+    )
+    lead = max((d[0] for d in shapes if d and len(d) >= 2), default=1)
     del dims
     return max(lead, 1)
 

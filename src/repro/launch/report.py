@@ -109,7 +109,10 @@ def main(argv=None):
         f"- single-pod baseline: {summarize(baseline)}",
         f"- single-pod optimized: {summarize(opt)}",
         f"- multi-pod (2x16x16) optimized: {summarize(multi)}\n",
-        roofline_table(baseline, title="Single-pod 16x16 — paper-faithful baseline (cache_layout=heads)"),
+        roofline_table(
+            baseline,
+            title="Single-pod 16x16 — paper-faithful baseline (cache_layout=heads)",
+        ),
         roofline_table(opt, title="Single-pod 16x16 — optimized (cache_layout=seq)"),
         roofline_table(multi, title="Multi-pod 2x16x16 — optimized (P2P peers = pods)"),
         "### Baseline vs optimized (>=1.25x deltas)\n",

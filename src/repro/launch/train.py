@@ -62,6 +62,8 @@ def run_paper_experiment(
     verbose: bool = False,
     peer_axis: str = "vmap",
     driver: str = "scan",
+    peers_per_device: int = 1,
+    mix_mode: str = "auto",
 ) -> metrics_lib.RoundLog:
     """``peer_axis``: "vmap" (stacked runtime, any device count) or "pod" (the
     sharded runtime: one device per peer, bit-identical results — see
@@ -74,12 +76,27 @@ def run_paper_experiment(
     parity baseline — the two are fp32 bit-identical).  Both drivers evaluate
     at the same cadence: after rounds ``eval_every, 2*eval_every, ...`` (the
     end of each eval period).
+
+    ``peers_per_device`` > 1 (with ``peer_axis="pod"``) selects the
+    HIERARCHICAL runtime: K / peers_per_device mesh slices, each vmapping a
+    block of peers, consensus over the degree-bounded sparse schedule
+    (``core.graph.SparseSchedule``).  ``mix_mode`` picks its consensus form:
+    "bridge" (fp32 bit-identical, K <= 64), "segment" (O(K * degree / devices)
+    memory, allclose), "auto" (bridge iff it is the parity regime).
     """
     rounds = rounds or exp.rounds
     if peer_axis not in ("vmap", "pod"):
         raise ValueError(f"peer_axis must be 'vmap' or 'pod', got {peer_axis!r}")
     if driver not in ("scan", "python"):
         raise ValueError(f"driver must be 'scan' or 'python', got {driver!r}")
+    if peers_per_device < 1:
+        raise ValueError(f"peers_per_device must be >= 1, got {peers_per_device}")
+    if peers_per_device > 1 and peer_axis != "pod":
+        raise ValueError(
+            "peers_per_device > 1 is the hierarchical sharded runtime — "
+            "it needs peer_axis='pod' (the vmap runtime already holds every "
+            "peer on one device)"
+        )
     if data is None:
         data = synthetic.mnist_like()
     x_tr, y_tr, x_te, y_te = data
@@ -96,12 +113,24 @@ def run_paper_experiment(
         from repro.launch import mesh as mesh_lib
         from repro.sharding import specs as specs_lib
 
-        mesh = mesh_lib.make_peer_mesh(cfg.num_peers)  # fails fast if short on devices
+        if cfg.num_peers % peers_per_device:
+            raise ValueError(
+                f"peers_per_device={peers_per_device} does not divide "
+                f"num_peers={cfg.num_peers}"
+            )
+        # fails fast if short on devices; with peers_per_device > 1 the mesh
+        # has K / p slices, each holding a contiguous block of p peers
+        mesh = mesh_lib.make_peer_mesh(cfg.num_peers // peers_per_device)
         state = specs_lib.shard_peer_tree(state, mesh)
+    hier = dict(peers_per_device=peers_per_device, mix_mode=mix_mode)
     if driver == "scan":
-        drive_fn = p2p.make_scan_driver(mlp.loss_2nn, cfg, data_sizes=sizes, mesh=mesh)
+        drive_fn = p2p.make_scan_driver(
+            mlp.loss_2nn, cfg, data_sizes=sizes, mesh=mesh, **hier
+        )
     elif peer_axis == "pod":
-        round_fn = p2p.make_sharded_round_fn(mlp.loss_2nn, cfg, mesh, data_sizes=sizes)
+        round_fn = p2p.make_sharded_round_fn(
+            mlp.loss_2nn, cfg, mesh, data_sizes=sizes, **hier
+        )
     else:
         round_fn = p2p.make_round_fn(mlp.loss_2nn, cfg, data_sizes=sizes)
 
@@ -260,6 +289,21 @@ def main(argv=None):
                          "a real mesh, one device per peer — on CPU set "
                          "XLA_FLAGS=--xla_force_host_platform_device_count=K "
                          "before launch; results are bit-identical)")
+    ap.add_argument("--peers-per-device", type=int, default=1,
+                    help="with --peer-axis pod: peers vmapped per mesh slice "
+                         "(default 1 = the classic one-device-per-peer "
+                         "runtime).  > 1 selects the HIERARCHICAL runtime — "
+                         "K/p mesh slices, consensus over the degree-bounded "
+                         "sparse schedule — decoupling the fleet size from "
+                         "the device count (K=4096 on 8 devices at p=512)")
+    ap.add_argument("--mix-mode", default="auto",
+                    choices=sorted(p2p.MIX_MODES),
+                    help="hierarchical consensus form (only with "
+                         "--peers-per-device > 1): 'bridge' replays the "
+                         "dense einsum rows (fp32 bit-identical, K <= 64), "
+                         "'segment' ring-streams degree-bounded slots "
+                         "(O(K*degree/devices) memory, allclose), 'auto' "
+                         "picks bridge iff K <= 64")
     ap.add_argument("--driver", default="scan", choices=["scan", "python"],
                     help="round driver: 'scan' fuses each eval period into one "
                          "jitted lax.scan chunk (donated state, one host "
@@ -384,19 +428,34 @@ def main(argv=None):
         exp = dataclasses.replace(
             exp, p2p=dataclasses.replace(exp.p2p, protocol=args.protocol)
         )
-    if args.peer_axis == "pod" and jax.device_count() < exp.p2p.num_peers:
-        # fail fast, before data generation and tracing, instead of letting
-        # the first jitted round die with an opaque XLA sharding/shape error
-        ap.error(
-            f"--peer-axis pod needs one device per peer: experiment "
-            f"{exp.name!r} has num_peers={exp.p2p.num_peers} but only "
-            f"{jax.device_count()} jax device(s) are visible. On CPU, "
-            f"relaunch with XLA_FLAGS=--xla_force_host_platform_device_count="
-            f"{exp.p2p.num_peers} set before the first jax import."
-        )
+    if args.peers_per_device < 1:
+        ap.error(f"--peers-per-device must be >= 1, got {args.peers_per_device}")
+    if args.peers_per_device > 1 and args.peer_axis != "pod":
+        ap.error("--peers-per-device > 1 needs --peer-axis pod "
+                 "(the hierarchical sharded runtime)")
+    if args.peer_axis == "pod":
+        if exp.p2p.num_peers % args.peers_per_device:
+            ap.error(
+                f"--peers-per-device {args.peers_per_device} does not divide "
+                f"num_peers={exp.p2p.num_peers} of experiment {exp.name!r}"
+            )
+        need = exp.p2p.num_peers // args.peers_per_device
+        if jax.device_count() < need:
+            # fail fast, before data generation and tracing, instead of
+            # letting the first jitted round die with an opaque XLA
+            # sharding/shape error
+            ap.error(
+                f"--peer-axis pod needs {need} device(s) (num_peers="
+                f"{exp.p2p.num_peers} / peers_per_device="
+                f"{args.peers_per_device}) but only {jax.device_count()} jax "
+                "device(s) are visible. On CPU, relaunch with XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={need} set before "
+                "the first jax import."
+            )
     log = run_paper_experiment(
         exp, rounds=args.rounds, verbose=True, peer_axis=args.peer_axis,
         driver=args.driver, eval_every=args.eval_every,
+        peers_per_device=args.peers_per_device, mix_mode=args.mix_mode,
     )
     print(f"done in {time.time()-t0:.1f}s")
     if args.out:

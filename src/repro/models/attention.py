@@ -238,7 +238,9 @@ def cross_attention_apply(
     return jnp.einsum("bte,ed->btd", ctx, params["w_o"])
 
 
-def encoder_kv(params: dict, cfg: AttentionConfig, enc_out: jax.Array) -> tuple[jax.Array, jax.Array]:
+def encoder_kv(
+    params: dict, cfg: AttentionConfig, enc_out: jax.Array
+) -> tuple[jax.Array, jax.Array]:
     k = jnp.einsum("btd,dkx->btkx", enc_out, params["w_k"])
     v = jnp.einsum("btd,dkx->btkx", enc_out, params["w_v"])
     return k, v
@@ -296,9 +298,13 @@ def mla_apply(
 
     if cfg.mla_absorb and cache is not None:
         # Absorbed decode: score/context directly in the latent space.
-        q_lat = jnp.einsum("bthn,rhn->bthr", q_nope.astype(jnp.float32), params["w_uk"].astype(jnp.float32))
+        q_lat = jnp.einsum(
+            "bthn,rhn->bthr", q_nope.astype(jnp.float32), params["w_uk"].astype(jnp.float32)
+        )
         scores = jnp.einsum("bthr,bcr->bhtc", q_lat, c_all.astype(jnp.float32))
-        scores += jnp.einsum("bthp,bcp->bhtc", q_rope.astype(jnp.float32), krope_all.astype(jnp.float32))
+        scores += jnp.einsum(
+            "bthp,bcp->bhtc", q_rope.astype(jnp.float32), krope_all.astype(jnp.float32)
+        )
         scores = scores * scale + jnp.where(mask, 0.0, NEG_INF)
         probs = jax.nn.softmax(scores, axis=-1)
         ctx_lat = jnp.einsum("bhtc,bcr->bthr", probs, c_all.astype(jnp.float32))
@@ -307,8 +313,12 @@ def mla_apply(
         # Expanded path (training / prefill / naive decode baseline).
         k_nope = jnp.einsum("bcr,rhn->bchn", c_all, params["w_uk"])
         vv = jnp.einsum("bcr,rhv->bchv", c_all, params["w_uv"])
-        scores = jnp.einsum("bthn,bchn->bhtc", q_nope.astype(jnp.float32), k_nope.astype(jnp.float32))
-        scores += jnp.einsum("bthp,bcp->bhtc", q_rope.astype(jnp.float32), krope_all.astype(jnp.float32))
+        scores = jnp.einsum(
+            "bthn,bchn->bhtc", q_nope.astype(jnp.float32), k_nope.astype(jnp.float32)
+        )
+        scores += jnp.einsum(
+            "bthp,bcp->bhtc", q_rope.astype(jnp.float32), krope_all.astype(jnp.float32)
+        )
         scores = scores * scale + jnp.where(mask, 0.0, NEG_INF)
         probs = jax.nn.softmax(scores, axis=-1)
         ctx = jnp.einsum("bhtc,bchv->bthv", probs, vv.astype(jnp.float32))

@@ -19,7 +19,9 @@ def truncated_normal_init(key, shape, scale: float, dtype) -> jax.Array:
     return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * scale).astype(dtype)
 
 
-def dense_init(key, in_dim: int, out_dims: Sequence[int] | int, dtype, *, scale: float | None = None):
+def dense_init(
+    key, in_dim: int, out_dims: Sequence[int] | int, dtype, *, scale: float | None = None
+):
     """Fan-in scaled init for a dense kernel (in_dim, *out_dims)."""
     out_dims = (out_dims,) if isinstance(out_dims, int) else tuple(out_dims)
     scale = scale if scale is not None else in_dim**-0.5

@@ -10,7 +10,9 @@ import jax
 import jax.numpy as jnp
 
 
-def init_2nn(key: jax.Array, *, in_dim: int = 784, hidden: int = 200, num_classes: int = 10) -> dict:
+def init_2nn(
+    key: jax.Array, *, in_dim: int = 784, hidden: int = 200, num_classes: int = 10
+) -> dict:
     def torch_linear(k, fan_in, fan_out):
         kw, kb = jax.random.split(k)
         bound = fan_in**-0.5

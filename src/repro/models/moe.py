@@ -52,7 +52,9 @@ def capacity(cfg: MoEConfig, tokens_per_group: int) -> int:
     return max(8, -(-c // 8) * 8)  # round up to a multiple of 8
 
 
-def apply(params: dict, cfg: MoEConfig, x: jax.Array, *, act: str = "silu") -> tuple[jax.Array, jax.Array]:
+def apply(
+    params: dict, cfg: MoEConfig, x: jax.Array, *, act: str = "silu"
+) -> tuple[jax.Array, jax.Array]:
     """x: (B, S, D). Returns (out (B,S,D), load-balance aux loss scalar f32)."""
     b, s, d = x.shape
     n = b * s
@@ -131,7 +133,9 @@ def apply(params: dict, cfg: MoEConfig, x: jax.Array, *, act: str = "silu") -> t
     return out.reshape(b, s, d), aux
 
 
-def apply_dense_reference(params: dict, cfg: MoEConfig, x: jax.Array, *, act: str = "silu") -> tuple[jax.Array, jax.Array]:
+def apply_dense_reference(
+    params: dict, cfg: MoEConfig, x: jax.Array, *, act: str = "silu"
+) -> tuple[jax.Array, jax.Array]:
     """O(N·E) oracle: every expert computed on every token, masked by top-k
     gates, no capacity dropping.  Used only in tests to validate `apply`."""
     b, s, d = x.shape

@@ -42,7 +42,9 @@ def mamba2_init(key: jax.Array, d_model: int, cfg: SSMConfig, dtype) -> dict:
     d_proj = 2 * d_in + 2 * cfg.ngroups * cfg.state_dim + h
     return {
         "in_proj": common.dense_init(ks[0], d_model, d_proj, dtype),
-        "conv_w": common.truncated_normal_init(ks[1], (cfg.conv_dim, cc), cfg.conv_dim**-0.5, dtype),
+        "conv_w": common.truncated_normal_init(
+            ks[1], (cfg.conv_dim, cc), cfg.conv_dim**-0.5, dtype
+        ),
         "conv_b": jnp.zeros((cc,), dtype),
         "dt_bias": jnp.zeros((h,), jnp.float32),
         "A_log": jnp.zeros((h,), jnp.float32),  # A = -exp(A_log) = -1 at init

@@ -77,7 +77,9 @@ def _scan_blocks(block_fn, x, stacked_params, stacked_cache, remat: bool):
         x, c, a = fn(p, x, c)
         return (x, aux + a), c
 
-    (x, aux), new_cache = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), (stacked_params, stacked_cache))
+    (x, aux), new_cache = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), (stacked_params, stacked_cache)
+    )
     return x, new_cache, aux
 
 
@@ -228,7 +230,9 @@ def rwkv6_init_model(key: jax.Array, cfg: ModelConfig) -> dict:
         "embed": common.embed_init(ks[0], cfg.vocab_size, cfg.d_model, dtype),
         "ln0": common.layernorm_init(cfg.d_model, dtype),
         "layers": _stacked_init(
-            ks[1], cfg.num_layers, lambda k: ssm.rwkv6_init(k, cfg.d_model, cfg.d_ff, cfg.ssm, dtype)
+            ks[1],
+            cfg.num_layers,
+            lambda k: ssm.rwkv6_init(k, cfg.d_model, cfg.d_ff, cfg.ssm, dtype),
         ),
         "final_norm": common.layernorm_init(cfg.d_model, dtype),
     }
@@ -398,7 +402,9 @@ def _hybrid_trunk_nocache(params, cfg: ModelConfig, x, positions, mamba_states):
     x0 = x
 
     def mamba_block(p, h, s):
-        o, s2 = ssm.mamba2_apply_chunked(p["mamba"], cfg.ssm, common.rmsnorm(p["ln"], h, cfg.norm_eps), s)
+        o, s2 = ssm.mamba2_apply_chunked(
+            p["mamba"], cfg.ssm, common.rmsnorm(p["ln"], h, cfg.norm_eps), s
+        )
         return h + o, s2
 
     mamba_block = jax.checkpoint(mamba_block) if cfg.remat else mamba_block

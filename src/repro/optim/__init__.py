@@ -63,7 +63,9 @@ def adamw(
 
     def update(grads, state, params, step):
         t = step.astype(jnp.float32) + 1.0
-        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32), state["m"], grads)
+        m = jax.tree.map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32), state["m"], grads
+        )
         v = jax.tree.map(
             lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)), state["v"], grads
         )

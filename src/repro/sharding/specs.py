@@ -224,6 +224,35 @@ def peer_batch_pspecs(tree: PyTree, *, peer_axis="pod") -> PyTree:
     return jax.tree.map(one, tree)
 
 
+def hierarchical_layout(
+    num_peers: int, mesh, *, peer_axis: str = "pod", peers_per_device: int
+) -> tuple[int, int]:
+    """Validate the hierarchical (vmap-within-device x shard_map) layout.
+
+    Returns ``(num_devices, peers_per_device)`` for a fleet of ``num_peers``
+    laid out block-major over the mesh's ``peer_axis``: global peer ``g``
+    lives on device ``g // peers_per_device``, local slot ``g % p`` — the
+    placement under which ``all_gather(..., tiled=True)`` reconstitutes the
+    stacked (K, ...) order and ``peer_stacked_pspecs`` shards the leading
+    axis contiguously.
+    """
+    axis_sizes = dict(mesh.shape)
+    num_devices = axis_sizes.get(peer_axis)
+    if num_devices is None:
+        raise ValueError(f"mesh has no axis {peer_axis!r}: {axis_sizes}")
+    if peers_per_device < 2:
+        raise ValueError(
+            "peers_per_device must be >= 2 for the hierarchical runtime "
+            "(peers_per_device=1 is the ordinary sharded runtime)"
+        )
+    if num_peers != peers_per_device * num_devices:
+        raise ValueError(
+            f"num_peers={num_peers} != peers_per_device={peers_per_device} "
+            f"x mesh axis {peer_axis!r}={num_devices}"
+        )
+    return num_devices, peers_per_device
+
+
 _PLACER_CACHE: dict = {}
 
 

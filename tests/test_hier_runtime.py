@@ -1,0 +1,315 @@
+"""Hierarchical runtime (vmap-within-device x shard_map): sparse vs dense.
+
+Tier-1 half: a 1-slice mesh holds ALL K = 8 peers on one device
+(peers_per_device = K), so the sparse degree-bounded consensus path runs in
+the ordinary single-device environment.  Bridge mode must be fp32
+BIT-identical (np.array_equal) to the vmap runtime on every state leaf,
+every round, for both protocols across the schedule grid — the acceptance
+contract of the sparse path.  Segment mode (the large-K form) is allclose:
+its degree-bounded sums reduce in slot order by design.
+
+Mesh half (``-m mesh``, 8 forced host devices): the same parity across a
+REAL multi-slice layout, plus the K = 4096 / peers_per_device = 512 smoke
+asserting the compiled program never materializes a (K, K) array.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import p2p
+from repro.launch import mesh as mesh_lib
+from repro.sharding import specs as specs_lib
+
+K = 8
+
+needs_mesh = pytest.mark.skipif(
+    jax.device_count() < K,
+    reason=f"needs >= {K} devices "
+           f"(XLA_FLAGS=--xla_force_host_platform_device_count={K})",
+)
+
+
+def _init_fn(key):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": jax.random.normal(k1, (6, 16)),
+        "b1": jnp.zeros((16,)),
+        "w2": jax.random.normal(k2, (16, 4)),
+    }
+
+
+def _mlp_loss(p, batch):
+    x, y = batch
+    h = jnp.tanh(x @ p["w1"] + p["b1"])
+    return jnp.mean(jnp.sum(jnp.square(h @ p["w2"] - y), axis=-1))
+
+
+def _round_batches(rng, t, k=K):
+    x = jnp.asarray(rng.normal(size=(t, k, 10, 6)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(t, k, 10, 4)), jnp.float32)
+    return (x, y)
+
+
+def _one_device_mesh():
+    return jax.sharding.Mesh(np.asarray(jax.devices()[:1]), ("pod",))
+
+
+def _cfg(protocol, schedule, extra):
+    return p2p.P2PConfig(
+        algorithm="p2pl_affinity", num_peers=K, local_steps=3,
+        consensus_steps=2, lr=0.1, momentum=0.3, eta_d=0.5, eta_b=0.1,
+        topology="ring", protocol=protocol, schedule=schedule,
+        schedule_rounds=5, **extra,
+    )
+
+
+SCHEDULE_GRID = [
+    ("static", {}),
+    ("link_dropout", {}),
+    ("round_robin", {"round_robin_topologies": ("ring", "star")}),
+]
+
+
+def _run_parity(protocol, schedule, extra, mesh, peers_per_device, mix_mode):
+    """Returns the worst leaf mismatch info across 6 rounds (crossing R=5)."""
+    cfg = _cfg(protocol, schedule, extra)
+    sizes = np.arange(1, K + 1)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        vmap_fn = p2p.make_round_fn(_mlp_loss, cfg, data_sizes=sizes)
+        hier_fn = p2p.make_sharded_round_fn(
+            _mlp_loss, cfg, mesh, data_sizes=sizes,
+            peers_per_device=peers_per_device, mix_mode=mix_mode,
+        )
+    s_vmap = p2p.init_state(jax.random.PRNGKey(0), _init_fn, cfg, data_sizes=sizes)
+    s_hier = specs_lib.shard_peer_tree(s_vmap, mesh)
+
+    rng = np.random.default_rng(0)
+    mismatches = []
+    for r in range(6):
+        batches = _round_batches(rng, cfg.local_steps)
+        al_v, s_vmap, loss_v = vmap_fn(s_vmap, batches)
+        al_h, s_hier, loss_h = hier_fn(s_hier, batches)
+        want = jax.tree_util.tree_leaves_with_path((al_v, s_vmap, loss_v))
+        got = jax.tree_util.tree_leaves_with_path((al_h, s_hier, loss_h))
+        assert len(want) == len(got)
+        for (path, w), (_, g) in zip(want, got):
+            w, g = np.asarray(w), np.asarray(g)
+            if not np.array_equal(w, g):
+                err = np.abs(w.astype(np.float64) - g.astype(np.float64)).max()
+                mismatches.append((r, jax.tree_util.keystr(path), err))
+    return mismatches
+
+
+@pytest.mark.parametrize("protocol", ["gossip", "push_sum"])
+@pytest.mark.parametrize("schedule,extra", SCHEDULE_GRID,
+                         ids=[s for s, _ in SCHEDULE_GRID])
+def test_bridge_bit_identical_to_vmap(protocol, schedule, extra):
+    """Sparse bridge path == dense vmap runtime, bit for bit, K = 8."""
+    mismatches = _run_parity(
+        protocol, schedule, extra, _one_device_mesh(),
+        peers_per_device=K, mix_mode="bridge",
+    )
+    assert not mismatches, (
+        f"{protocol}/{schedule} bridge diverged from the dense runtime: "
+        + "; ".join(f"round {r} {p} max|diff|={e:.3e}" for r, p, e in mismatches[:5])
+    )
+
+
+@pytest.mark.parametrize("protocol", ["gossip", "push_sum"])
+def test_auto_mode_is_bridge_at_small_k(protocol):
+    """mix_mode='auto' at K = 8 must select the bit-parity bridge."""
+    mismatches = _run_parity(
+        protocol, "link_dropout", {}, _one_device_mesh(),
+        peers_per_device=K, mix_mode="auto",
+    )
+    assert not mismatches
+
+
+@pytest.mark.parametrize("protocol", ["gossip", "push_sum"])
+def test_segment_allclose_to_vmap(protocol):
+    """The large-K segment path: allclose (slot-ordered sums), NOT bitwise."""
+    cfg = _cfg(protocol, "link_dropout", {})
+    sizes = np.arange(1, K + 1)
+    mesh = _one_device_mesh()
+    vmap_fn = p2p.make_round_fn(_mlp_loss, cfg, data_sizes=sizes)
+    hier_fn = p2p.make_sharded_round_fn(
+        _mlp_loss, cfg, mesh, data_sizes=sizes,
+        peers_per_device=K, mix_mode="segment",
+    )
+    s_vmap = p2p.init_state(jax.random.PRNGKey(0), _init_fn, cfg, data_sizes=sizes)
+    s_hier = specs_lib.shard_peer_tree(s_vmap, mesh)
+    rng = np.random.default_rng(0)
+    for _ in range(4):
+        batches = _round_batches(rng, cfg.local_steps)
+        _, s_vmap, _ = vmap_fn(s_vmap, batches)
+        _, s_hier, _ = hier_fn(s_hier, batches)
+    for w, g in zip(jax.tree.leaves(s_vmap), jax.tree.leaves(s_hier)):
+        np.testing.assert_allclose(
+            np.asarray(w, np.float64), np.asarray(g, np.float64),
+            rtol=1e-5, atol=1e-5,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Fail-fast paths (run everywhere, no mesh needed)
+# ---------------------------------------------------------------------------
+
+
+def test_peers_per_device_needs_mesh():
+    cfg = _cfg("gossip", "static", {})
+    with pytest.raises(ValueError, match="needs a mesh"):
+        p2p._make_round_step(_mlp_loss, cfg, peers_per_device=4)
+
+
+def test_adaptive_schedule_rejected():
+    cfg = p2p.P2PConfig(
+        algorithm="p2pl_affinity", num_peers=K, local_steps=2,
+        consensus_steps=1, lr=0.1, topology="ring", schedule="adaptive",
+    )
+    with pytest.raises(ValueError, match="adaptive"):
+        p2p.make_sharded_round_fn(
+            _mlp_loss, cfg, _one_device_mesh(), peers_per_device=K,
+        )
+
+
+def test_layout_validation():
+    mesh = _one_device_mesh()
+    with pytest.raises(ValueError, match="peers_per_device"):
+        specs_lib.hierarchical_layout(K, mesh, peers_per_device=1)
+    with pytest.raises(ValueError, match="num_peers"):
+        specs_lib.hierarchical_layout(K, mesh, peers_per_device=3)
+    with pytest.raises(ValueError, match="no axis"):
+        specs_lib.hierarchical_layout(K, mesh, peer_axis="model",
+                                      peers_per_device=K)
+    assert specs_lib.hierarchical_layout(K, mesh, peers_per_device=K) == (1, K)
+
+
+def test_bad_mix_mode_rejected():
+    cfg = _cfg("gossip", "static", {})
+    with pytest.raises(ValueError, match="mix_mode"):
+        p2p.make_sharded_round_fn(
+            _mlp_loss, cfg, _one_device_mesh(), peers_per_device=K,
+            mix_mode="dense",
+        )
+
+
+# ---------------------------------------------------------------------------
+# Multi-slice mesh half
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.mesh
+@needs_mesh
+@pytest.mark.parametrize("protocol", ["gossip", "push_sum"])
+@pytest.mark.parametrize("devices,ppd", [(2, 4), (4, 2)])
+def test_bridge_bit_identical_multi_device(protocol, devices, ppd):
+    """Bridge parity holds when the blocks genuinely live on different
+    devices and the gathered view crosses the mesh."""
+    mesh = mesh_lib.make_peer_mesh(devices)
+    mismatches = _run_parity(
+        protocol, "link_dropout", {}, mesh,
+        peers_per_device=ppd, mix_mode="bridge",
+    )
+    assert not mismatches, (
+        f"{protocol} bridge ({devices} dev x {ppd} peers) diverged: "
+        + "; ".join(f"round {r} {p} max|diff|={e:.3e}" for r, p, e in mismatches[:5])
+    )
+
+
+@pytest.mark.mesh
+@needs_mesh
+@pytest.mark.parametrize("protocol", ["gossip", "push_sum"])
+def test_segment_allclose_multi_device(protocol):
+    cfg = _cfg(protocol, "static", {})
+    sizes = np.arange(1, K + 1)
+    mesh = mesh_lib.make_peer_mesh(4)
+    vmap_fn = p2p.make_round_fn(_mlp_loss, cfg, data_sizes=sizes)
+    hier_fn = p2p.make_sharded_round_fn(
+        _mlp_loss, cfg, mesh, data_sizes=sizes,
+        peers_per_device=2, mix_mode="segment",
+    )
+    s_vmap = p2p.init_state(jax.random.PRNGKey(0), _init_fn, cfg, data_sizes=sizes)
+    s_hier = specs_lib.shard_peer_tree(s_vmap, mesh)
+    rng = np.random.default_rng(0)
+    for _ in range(3):
+        batches = _round_batches(rng, cfg.local_steps)
+        _, s_vmap, _ = vmap_fn(s_vmap, batches)
+        _, s_hier, _ = hier_fn(s_hier, batches)
+    for w, g in zip(jax.tree.leaves(s_vmap), jax.tree.leaves(s_hier)):
+        np.testing.assert_allclose(
+            np.asarray(w, np.float64), np.asarray(g, np.float64),
+            rtol=1e-5, atol=1e-5,
+        )
+
+
+def _no_kk_avals(jaxpr, k, path="jaxpr"):
+    """Recursively assert no aval in the jaxpr has two dims == k."""
+    bad = []
+
+    def visit(jx, where):
+        for eqn in jx.eqns:
+            for var in list(eqn.invars) + list(eqn.outvars):
+                aval = getattr(var, "aval", None)
+                shape = getattr(aval, "shape", ())
+                if sum(1 for d in shape if d == k) >= 2:
+                    bad.append((where, eqn.primitive.name, shape))
+            for val in eqn.params.values():
+                for v in val if isinstance(val, (list, tuple)) else (val,):
+                    # bare Jaxpr (e.g. shard_map's body) has .eqns itself;
+                    # ClosedJaxpr wraps one under .jaxpr
+                    inner = v if hasattr(v, "eqns") else getattr(v, "jaxpr", None)
+                    if inner is not None and hasattr(inner, "eqns"):
+                        visit(inner, f"{where}/{eqn.primitive.name}")
+
+    visit(jaxpr, path)
+    return bad
+
+
+@pytest.mark.mesh
+@needs_mesh
+@pytest.mark.parametrize("protocol", ["gossip", "push_sum"])
+def test_large_k_fleet_runs_without_dense_matrix(protocol):
+    """K = 4096 on an 8-slice mesh, 512 peers per slice: one full round of
+    the sparse segment runtime completes with finite outputs, and the traced
+    program NEVER materializes a (4096, 4096) array — peak per-device
+    consensus memory is O(K * degree_bound * feat / devices)."""
+    bigk, devices = 4096, 8
+    ppd = bigk // devices
+    cfg = p2p.P2PConfig(
+        algorithm="p2pl_affinity", num_peers=bigk, local_steps=1,
+        consensus_steps=1, lr=0.1, eta_d=0.5, topology="ring",
+        protocol=protocol, schedule="static",
+    )
+    mesh = mesh_lib.make_peer_mesh(devices)
+
+    def tiny_loss(p, batch):
+        x, y = batch
+        return jnp.mean(jnp.square(x @ p["w"] - y))
+
+    def tiny_init(key):
+        return {"w": jax.random.normal(key, (3, 2)) * 0.1}
+
+    step = p2p._make_round_step(
+        tiny_loss, cfg, None, mesh=mesh, peers_per_device=ppd,
+        mix_mode="segment",
+    )
+    state = specs_lib.shard_peer_tree(
+        p2p.init_state(jax.random.PRNGKey(0), tiny_init, cfg), mesh
+    )
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(1, bigk, 2, 3)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(1, bigk, 2, 2)), jnp.float32)
+
+    jaxpr = jax.make_jaxpr(step)(state, (x, y))
+    bad = _no_kk_avals(jaxpr.jaxpr, bigk)
+    assert not bad, f"dense (K, K) intermediates found: {bad[:5]}"
+
+    after_local, after_cons, losses = jax.jit(step)(state, (x, y))
+    assert np.isfinite(np.asarray(losses)).all()
+    assert int(after_cons.round_idx) == 1
+    for leaf in jax.tree.leaves(after_cons.params):
+        assert np.isfinite(np.asarray(leaf)).all()

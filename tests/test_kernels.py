@@ -53,6 +53,115 @@ def test_consensus_mix_preserves_constant(rng):
 
 
 # ---------------------------------------------------------------------------
+# consensus_mix segment (edge-list gather inside the kernel)
+# ---------------------------------------------------------------------------
+
+
+def _sparse_round(k, rng, schedule="link_dropout", stochasticity="row"):
+    from repro.core import graph as gl
+    from repro.core import p2p
+
+    cfg = p2p.P2PConfig(num_peers=k, topology="ring", schedule=schedule,
+                        schedule_rounds=3, protocol="gossip")
+    sp = gl.SparseSchedule.from_schedule(
+        p2p.build_schedule(cfg), "data_weighted",
+        data_sizes=rng.integers(5, 30, size=k),
+        consensus_step_size=0.8, stochasticity=stochasticity,
+    )
+    return sp, sp.to_dense()
+
+
+@pytest.mark.parametrize("k,n", [(8, 64), (16, 300), (8, 1000)])
+def test_segment_mix_matches_dense_ref(k, n, rng):
+    from repro.kernels.consensus_mix import segment as cm_seg
+
+    sp, (w_np, b_np) = _sparse_round(k, rng)
+    flat = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    stacked = {"w": flat}
+    for r in range(sp.period):
+        got_m, got_d = cm_seg.segment_mix_stacked(
+            stacked, jnp.asarray(sp.self_w[r], jnp.float32),
+            jnp.asarray(sp.nbr_idx[r]), jnp.asarray(sp.nbr_w[r], jnp.float32),
+            jnp.asarray(sp.beta[r], jnp.float32), 5,
+        )
+        want_m, want_d = cm_ref.segment_mix_ref(
+            flat, jnp.asarray(w_np[r], jnp.float32),
+            jnp.asarray(b_np[r], jnp.float32), 5,
+        )
+        np.testing.assert_allclose(
+            np.asarray(got_m["w"]), np.asarray(want_m), atol=5e-5, rtol=1e-4
+        )
+        np.testing.assert_allclose(
+            np.asarray(got_d["w"]), np.asarray(want_d), atol=5e-5, rtol=1e-4
+        )
+
+
+def test_segment_mix_push_sum_matches_dense_ref(rng):
+    from repro.kernels.consensus_mix import segment as cm_seg
+
+    k, n = 16, 200
+    sp, (a_np, b_np) = _sparse_round(k, rng, stochasticity="column")
+    flat = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    mass = jnp.asarray(rng.uniform(0.5, 2.0, size=k), jnp.float32)
+    for r in range(sp.period):
+        got_m, got_d, got_y = cm_seg.segment_mix_push_sum_stacked(
+            {"w": flat}, mass, jnp.asarray(sp.self_w[r], jnp.float32),
+            jnp.asarray(sp.nbr_idx[r]), jnp.asarray(sp.nbr_w[r], jnp.float32),
+            jnp.asarray(sp.beta[r], jnp.float32), 5,
+        )
+        want_m, want_d, want_y = cm_ref.segment_mix_push_sum_ref(
+            flat, mass, jnp.asarray(a_np[r], jnp.float32),
+            jnp.asarray(b_np[r], jnp.float32), 5,
+        )
+        np.testing.assert_allclose(
+            np.asarray(got_m["w"]), np.asarray(want_m), atol=5e-5, rtol=1e-4
+        )
+        np.testing.assert_allclose(
+            np.asarray(got_d["w"]), np.asarray(want_d), atol=5e-5, rtol=1e-4
+        )
+        np.testing.assert_allclose(
+            np.asarray(got_y), np.asarray(want_y), atol=5e-6, rtol=1e-5
+        )
+
+
+def test_segment_mix_schedule_selects_round(rng):
+    from repro.kernels.consensus_mix import segment as cm_seg
+
+    k, n = 8, 128
+    sp, (w_np, b_np) = _sparse_round(k, rng)
+    flat = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    stacks = (
+        jnp.asarray(sp.self_w, jnp.float32), jnp.asarray(sp.nbr_idx),
+        jnp.asarray(sp.nbr_w, jnp.float32), jnp.asarray(sp.beta, jnp.float32),
+    )
+    got_m, _ = cm_seg.segment_mix_schedule({"w": flat}, jnp.int32(4), *stacks, 5)
+    r = 4 % sp.period
+    want_m, _ = cm_ref.segment_mix_ref(
+        flat, jnp.asarray(w_np[r], jnp.float32),
+        jnp.asarray(b_np[r], jnp.float32), 5,
+    )
+    np.testing.assert_allclose(
+        np.asarray(got_m["w"]), np.asarray(want_m), atol=5e-5, rtol=1e-4
+    )
+
+
+def test_segment_mix_isolated_peer_keeps_zero_d(rng):
+    """A peer with an all-zero beta row (degree-0 this round) keeps d = 0."""
+    from repro.kernels.consensus_mix import segment as cm_seg
+
+    k, n = 4, 128
+    flat = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    # peer 0 isolated: its slots point at itself with zero weights
+    nbr_idx = jnp.asarray([[0, 0], [0, 2], [1, 3], [2, 2]], jnp.int32)
+    nbr_w = jnp.asarray([[0, 0], [0.3, 0.3], [0.3, 0.3], [0.3, 0]], jnp.float32)
+    beta = jnp.asarray([[0, 0], [0.5, 0.5], [0.5, 0.5], [1.0, 0]], jnp.float32)
+    self_w = jnp.asarray([1.0, 0.4, 0.4, 0.7], jnp.float32)
+    _, d = cm_seg.segment_mix_stacked({"w": flat}, self_w, nbr_idx, nbr_w, beta, 5)
+    np.testing.assert_array_equal(np.asarray(d["w"][0]), 0.0)
+    assert np.abs(np.asarray(d["w"][1:])).max() > 0
+
+
+# ---------------------------------------------------------------------------
 # flash attention
 # ---------------------------------------------------------------------------
 
@@ -120,7 +229,9 @@ def test_wkv6_extreme_decay_no_overflow(rng):
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
 
 
-@pytest.mark.parametrize("t,h,p,n,chunk", [(64, 2, 32, 16, 16), (32, 3, 16, 8, 8), (48, 1, 64, 32, 48)])
+@pytest.mark.parametrize(
+    "t,h,p,n,chunk", [(64, 2, 32, 16, 16), (32, 3, 16, 8, 8), (48, 1, 64, 32, 48)]
+)
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_ssd_sweep(t, h, p, n, chunk, dtype, rng):
     b = 2

@@ -84,7 +84,9 @@ def test_multi_token_decode_consistency(arch, built):
         dec_len += batch["patches"].shape[1]
     tok = jnp.zeros((1,), jnp.int32)
     for i in range(3):
-        logits, cache = model.decode_step(params, tok, jnp.full((1,), dec_len + i, jnp.int32), cache)
+        logits, cache = model.decode_step(
+            params, tok, jnp.full((1,), dec_len + i, jnp.int32), cache
+        )
         assert np.isfinite(np.asarray(logits)).all()
         tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
 

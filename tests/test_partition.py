@@ -1,0 +1,78 @@
+"""Regression tests for the data/partition.py correctness fixes.
+
+Each test pins a bug that silently corrupted the data-weighted consensus
+math: dropped remainder samples (IID), empty peers (Dirichlet at small
+alpha), and silently-empty class selections (pathological with a bad label).
+"""
+import numpy as np
+import pytest
+
+from repro.data import partition
+
+
+def _toy(n, num_classes=10, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, 4)).astype(np.float32)
+    y = rng.integers(0, num_classes, size=n).astype(np.int64)
+    return x, y
+
+
+class TestIIDPartition:
+    @pytest.mark.parametrize("n,k", [(103, 8), (100, 7), (64, 8), (9, 8)])
+    def test_full_coverage_non_divisible(self, n, k):
+        x, y = _toy(n)
+        parts = partition.iid_partition(x, y, k, seed=1)
+        assert len(parts) == k
+        assert int(partition.data_sizes(parts).sum()) == n
+
+    def test_remainder_spread_over_first_peers(self):
+        x, y = _toy(103)
+        sizes = partition.data_sizes(partition.iid_partition(x, y, 8))
+        # 103 = 8*12 + 7: first 7 peers get 13, last gets 12.
+        assert sizes.tolist() == [13] * 7 + [12]
+
+    def test_partition_is_disjoint_union(self):
+        x, y = _toy(50)
+        x = np.arange(50, dtype=np.float32).reshape(50, 1)  # unique values
+        parts = partition.iid_partition(x, y[:50], 7, seed=3)
+        seen = np.concatenate([p[0][:, 0] for p in parts])
+        assert sorted(seen.tolist()) == list(range(50))
+
+
+class TestDirichletPartition:
+    @pytest.mark.parametrize("alpha", [0.01, 0.05, 0.1])
+    def test_small_alpha_no_empty_peers(self, alpha):
+        x, y = _toy(200)
+        for seed in range(5):
+            parts = partition.dirichlet_partition(
+                x, y, 16, alpha=alpha, seed=seed
+            )
+            sizes = partition.data_sizes(parts)
+            assert (sizes >= 1).all(), f"empty peer at alpha={alpha} seed={seed}"
+            assert int(sizes.sum()) == len(x)
+
+    def test_too_few_samples_raises(self):
+        x, y = _toy(4)
+        with pytest.raises(ValueError, match="at least one sample per peer"):
+            partition.dirichlet_partition(x, y, 8)
+
+    def test_moderate_alpha_unchanged_total(self):
+        x, y = _toy(500)
+        parts = partition.dirichlet_partition(x, y, 8, alpha=0.5, seed=0)
+        assert int(partition.data_sizes(parts).sum()) == 500
+
+
+class TestPathologicalPartition:
+    def test_bad_label_raises_with_offender(self):
+        x, y = _toy(100, num_classes=10)
+        with pytest.raises(ValueError, match="class 37"):
+            partition.pathological_partition(x, y, [(0, 1), (37, 8)])
+
+    def test_valid_labels_still_work(self):
+        x, y = _toy(200, num_classes=10)
+        parts = partition.pathological_partition(
+            x, y, [(0, 1), (2, 3)], samples_per_class=5
+        )
+        assert len(parts) == 2
+        assert set(np.unique(parts[0][1]).tolist()) <= {0, 1}
+        assert set(np.unique(parts[1][1]).tolist()) <= {2, 3}

@@ -145,7 +145,9 @@ def test_gossip_bit_identical_to_pr1_path(schedule, extra):
     for _ in range(7):
         al_n, s_new, loss_n = new_fn(s_new, batches)
         al_o, s_old, loss_o = old_fn(s_old, batches)
-        new_leaves = jax.tree.leaves((al_n._replace(protocol=()), s_new._replace(protocol=()), loss_n))
+        new_leaves = jax.tree.leaves(
+            (al_n._replace(protocol=()), s_new._replace(protocol=()), loss_n)
+        )
         old_leaves = jax.tree.leaves((al_o, s_old, loss_o))
         for leaf_n, leaf_o in zip(new_leaves, old_leaves):
             assert np.array_equal(np.asarray(leaf_n), np.asarray(leaf_o))

@@ -1,0 +1,128 @@
+"""graph.SparseSchedule: the degree-bounded CSR-style schedule form.
+
+The contract under test is LOSSLESS convertibility for K <= 64: the direct
+sparse builders must produce float64-EXACT copies of the dense
+``schedule_matrices`` values (np.array_equal, not allclose), and
+``to_dense``/``from_dense`` must round-trip without changing a single bit.
+That exactness is what lets the hierarchical runtime's bridge mode replay
+the dense runtime's einsums bit-for-bit.
+"""
+import numpy as np
+import pytest
+
+from repro.core import graph as gl
+from repro.core import p2p
+
+K = 8
+
+MIXINGS = ["data_weighted", "metropolis", "uniform_neighbor", "identity"]
+SCHEDULES = [
+    ("static", {}),
+    ("link_dropout", {}),
+    ("one_way_matching", {}),
+    ("round_robin", {"round_robin_topologies": ("ring", "star")}),
+]
+
+
+def _schedule(name, extra, num_peers=K):
+    cfg = p2p.P2PConfig(
+        num_peers=num_peers, topology="ring", schedule=name,
+        schedule_rounds=4, protocol="gossip", **extra,
+    )
+    return p2p.build_schedule(cfg)
+
+
+@pytest.mark.parametrize("mixing", MIXINGS)
+@pytest.mark.parametrize("stochasticity", ["row", "column"])
+@pytest.mark.parametrize("name,extra", SCHEDULES, ids=[s for s, _ in SCHEDULES])
+def test_from_schedule_exactly_matches_dense(name, extra, mixing, stochasticity):
+    """Direct sparse build == dense schedule_matrices, bit for bit (f64)."""
+    sched = _schedule(name, extra)
+    sizes = np.arange(3, 3 + K)
+    w, beta = gl.schedule_matrices(
+        sched, mixing, data_sizes=sizes, consensus_step_size=0.9,
+        stochasticity=stochasticity,
+    )
+    sp = gl.SparseSchedule.from_schedule(
+        sched, mixing, data_sizes=sizes, consensus_step_size=0.9,
+        stochasticity=stochasticity,
+    )
+    w2, beta2 = sp.to_dense()
+    assert np.array_equal(w, w2), f"{name}/{mixing}/{stochasticity}: W differs"
+    assert np.array_equal(beta, beta2), f"{name}/{mixing}: beta differs"
+
+
+@pytest.mark.parametrize("name,extra", SCHEDULES, ids=[s for s, _ in SCHEDULES])
+def test_from_dense_round_trip(name, extra):
+    sched = _schedule(name, extra)
+    sizes = np.arange(1, K + 1)
+    w, beta = gl.schedule_matrices(sched, "data_weighted", data_sizes=sizes)
+    sp = gl.SparseSchedule.from_dense(w, beta, stochasticity="row")
+    w2, beta2 = sp.to_dense()
+    assert np.array_equal(w, w2)
+    assert np.array_equal(beta, beta2)
+
+
+def test_round_edges_matches_dense_pattern():
+    sched = _schedule("link_dropout", {})
+    w, beta = gl.schedule_matrices(sched, "data_weighted",
+                                   data_sizes=np.ones(K, int) * 5)
+    sp = gl.SparseSchedule.from_dense(w, beta, stochasticity="row")
+    for r in range(sp.period):
+        send, recv, weights = sp.round_edges(r)
+        dense_edges = {
+            (j, i)
+            for i in range(K)
+            for j in range(K)
+            if i != j and (w[r, i, j] != 0.0 or beta[r, i, j] != 0.0)
+        }
+        assert set(zip(send.tolist(), recv.tolist())) == dense_edges
+        for j, i, wt in zip(send, recv, weights):
+            assert wt == w[r, i, j]
+
+
+def test_degree_bound_validation():
+    sched = _schedule("static", {})
+    w, beta = gl.schedule_matrices(sched, "data_weighted",
+                                   data_sizes=np.ones(K, int))
+    # ring in-degree is 2; a bound of 1 must refuse, not silently truncate
+    with pytest.raises(ValueError, match="degree"):
+        gl.SparseSchedule.from_dense(w, beta, stochasticity="row", degree_bound=1)
+    # an explicit larger bound pads and still round-trips exactly
+    sp = gl.SparseSchedule.from_dense(w, beta, stochasticity="row", degree_bound=5)
+    assert sp.degree_bound == 5
+    w2, beta2 = sp.to_dense()
+    assert np.array_equal(w, w2)
+    assert np.array_equal(beta, beta2)
+
+
+def test_shapes_and_dtypes():
+    sched = _schedule("link_dropout", {})
+    sp = gl.SparseSchedule.from_schedule(
+        sched, "data_weighted", data_sizes=np.ones(K, int) * 2,
+        consensus_step_size=1.0,
+    )
+    r, k, d = sp.period, sp.num_peers, sp.degree_bound
+    assert sp.self_w.shape == (r, k)
+    assert sp.nbr_idx.shape == sp.nbr_w.shape == sp.beta.shape == (r, k, d)
+    assert sp.nbr_idx.dtype == np.int32
+    assert (sp.nbr_idx >= 0).all() and (sp.nbr_idx < k).all()
+
+
+def test_large_k_build_stays_sparse():
+    """K = 4096 ring: the sparse build never allocates a (K, K) array and the
+    degree bound stays at the topology's in-degree (2), so the whole schedule
+    is R * K * 2 weights — the form the large-K runtime consumes."""
+    bigk = 4096
+    cfg = p2p.P2PConfig(num_peers=bigk, topology="ring", schedule="static",
+                        protocol="gossip")
+    sched = p2p.build_schedule(cfg)
+    sp = gl.SparseSchedule.from_schedule(
+        sched, "metropolis", data_sizes=None, consensus_step_size=1.0,
+    )
+    assert sp.num_peers == bigk
+    assert sp.degree_bound == 2
+    assert sp.nbr_w.shape == (1, bigk, 2)
+    # spot-check one row against the metropolis rule: ring degree 2
+    # everywhere -> off-diagonal weight 1/3
+    np.testing.assert_allclose(sp.nbr_w[0, 17], [1 / 3, 1 / 3])

@@ -52,8 +52,9 @@ def test_mamba2_decode_one_token(mamba_params):
 def test_rwkv6_chunked_equals_scan(rwkv_params):
     x = jax.random.normal(jax.random.PRNGKey(4), (2, 24, D), jnp.float32)
     st = ssm.rwkv6_state(D, R_CFG, 2, jnp.float32)
-    o1, p1, w1 = ssm.rwkv6_time_mix_scan(rwkv_params["time_mix"], R_CFG, x, st["tm_prev"], st["wkv"])
-    o2, p2, w2 = ssm.rwkv6_time_mix_chunked(rwkv_params["time_mix"], R_CFG, x, st["tm_prev"], st["wkv"])
+    tm = rwkv_params["time_mix"]
+    o1, p1, w1 = ssm.rwkv6_time_mix_scan(tm, R_CFG, x, st["tm_prev"], st["wkv"])
+    o2, p2, w2 = ssm.rwkv6_time_mix_chunked(tm, R_CFG, x, st["tm_prev"], st["wkv"])
     np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=3e-5)
     np.testing.assert_allclose(np.asarray(w1), np.asarray(w2), atol=3e-5)
     np.testing.assert_allclose(np.asarray(p1), np.asarray(p2))
