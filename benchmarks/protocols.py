@@ -146,3 +146,126 @@ ALL_PROTOCOLS = {
     "proto_mixing": protocol_mixing,
     "proto_train": protocol_training,
 }
+
+
+# ---------------------------------------------------------------------------
+# Compression Pareto: bytes per round x final accuracy
+# ---------------------------------------------------------------------------
+#
+# The claim the compression subsystem (repro/compression) exists to deliver:
+# error-feedback top-k cuts consensus traffic by an order of magnitude on the
+# paper's non-IID k8 workload without giving up the accuracy the consensus
+# phase buys.  Each variant trains the SAME seeded timevarying_k8 run under
+# one compressor; bytes are analytic (benchmarks.wire — the audited formulas
+# shared with the scaling rows), accuracy is the paper's own instrument.
+#
+# Row layout (serialized to ``BENCH_compression.json`` by ``benchmarks/run.py``):
+#
+#     compression_{name}_final_acc     us col = wall-clock us/round,
+#                                      derived = final all-class accuracy
+#     compression_{name}_bytes_round   us col = bytes ONE peer sends per edge,
+#                                      derived = analytic fleet bytes/round
+#     compression_bytes_reduction      us col = none/topk bytes ratio,
+#                                      derived = 1.0 iff ratio >= 10
+#     compression_accuracy_delta       us col = max(0, acc_none - acc_topk),
+#                                      derived = 1.0 iff delta <= 0.01
+#
+# Traffic is priced honestly per delivery model: the raw baseline pays the
+# round's ACTIVE directed edges (a message is only needed where the mixing
+# weight is nonzero), while compressed variants pay every UNION edge of the
+# schedule every step (estimate tracking needs sender/receiver copies of x̂
+# to advance in lockstep, so payloads flow on all lanes — see
+# ``benchmarks.wire``).  At frac=0.025 that is still a 11.5x reduction.
+
+TOPK_FRAC = 0.025
+_BYTES_REDUCTION_GATE = 10.0
+_ACCURACY_DELTA_GATE = 0.01
+
+# (variant label, compressor name) — 'none' is the fp32 bit-identical baseline
+COMPRESSION_VARIANTS = (
+    ("none", "none"),
+    ("topk", "topk"),
+    ("qint8", "qint8"),
+)
+
+
+def compression_pareto(full=False):
+    """Bytes-per-round x final-accuracy Pareto of the compressed-gossip grid."""
+    import time
+
+    from benchmarks import wire
+    from repro import compression as compression_lib
+    from repro.configs.p2pl_mnist import timevarying_k8
+    from repro.core import p2p
+    from repro.data import synthetic
+    from repro.launch.train import run_paper_experiment
+    from repro.models import mlp
+
+    # error feedback needs a horizon: the estimates converge onto the
+    # parameters over rounds, so short runs understate compressed accuracy
+    rounds = 96 if full else 48
+    data = synthetic.mnist_like(20000 if full else 6000, 5000 if full else 1500)
+
+    out = []
+    acc = {}
+    bytes_round = {}
+    for name, compressor in COMPRESSION_VARIANTS:
+        exp = timevarying_k8(
+            "round_robin", "p2pl_affinity", 10,
+            compressor=compressor, topk_frac=TOPK_FRAC,
+        )
+        cfg = exp.p2p
+
+        # analytic traffic: the average round graph's directed edges, each
+        # carrying one compressed message per consensus step
+        sched = p2p.build_schedule(cfg)
+        proto = protocols_lib.get_protocol(cfg.protocol)
+        consts = proto.constants(
+            sched, cfg.mixing,
+            data_sizes=np.full(cfg.num_peers, 100),
+        )
+        params = jax.eval_shape(
+            jax.vmap(mlp.init_2nn),
+            jax.ShapeDtypeStruct((cfg.num_peers, 2), jnp.uint32),
+        )
+        comp = compression_lib.from_config(cfg)
+        msg = wire.message_nbytes(comp, params)
+        # raw gossip pays only the round's active edges; estimate-tracking
+        # payloads ride every union lane every step (see benchmarks.wire)
+        if comp.identity:
+            bytes_round[name] = wire.gossip_bytes_per_round(
+                consts.w, msg, cfg.consensus_steps
+            )
+        else:
+            bytes_round[name] = wire.estimate_gossip_bytes_per_round(
+                consts.w, msg, cfg.consensus_steps
+            )
+
+        t0 = time.time()
+        log = run_paper_experiment(exp, rounds=rounds, data=data)
+        us = (time.time() - t0) / rounds * 1e6
+        acc[name] = log.final_accuracy("all")
+        out.append((f"compression_{name}_final_acc", us, acc[name]))
+        out.append((f"compression_{name}_bytes_round", msg, bytes_round[name]))
+
+    # the CI-gated claim: >= 10x fewer bytes on the wire at <= 1% accuracy
+    # cost (error feedback re-injects what top-k drops, so the sparsified run
+    # tracks the fp32 baseline)
+    ratio = bytes_round["none"] / bytes_round["topk"]
+    delta = max(0.0, acc["none"] - acc["topk"])
+    out.append((
+        "compression_bytes_reduction",
+        ratio,  # us column carries the reduction ratio
+        1.0 if ratio >= _BYTES_REDUCTION_GATE else 0.0,
+    ))
+    out.append((
+        "compression_accuracy_delta",
+        delta,  # us column carries the accuracy delta
+        1.0 if delta <= _ACCURACY_DELTA_GATE else 0.0,
+    ))
+    return out
+
+
+ALL_COMPRESSION = {
+    "compression": compression_pareto,
+}

@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks import wire
 from benchmarks.timing import median_us
 from repro.core import consensus as consensus_lib
 from repro.core import p2p
@@ -193,9 +194,10 @@ def _scaling_bytes(k: int) -> float:
     The segment mix ring-streams every device's (peers_per_device, DIM) fp32
     block through the other ``devices - 1`` slices once per consensus step:
     S * (devices - 1) * K * DIM * 4 bytes — linear in K at fixed degree,
-    against the dense runtime's K^2 weight traffic.
+    against the dense runtime's K^2 weight traffic.  The formula itself lives
+    in ``benchmarks.wire`` so the compression Pareto rows share the audit.
     """
-    return float((_scaling_devices(k) - 1) * k * SCALING_DIM * 4)
+    return wire.ring_stream_bytes(_scaling_devices(k), k * SCALING_DIM)
 
 
 def _scaling_cell(k: int, full: bool) -> float:

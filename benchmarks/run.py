@@ -2,10 +2,12 @@
 benches.  Prints ``name,us_per_call,derived`` CSV (see figures.py/kernels.py)
 and serializes the consensus-protocol rows to ``BENCH_protocols.json``, the
 round-loop driver rows to ``BENCH_roundloop.json``, the adaptive
-partner-selection rows to ``BENCH_adaptive.json``, and the K-scaling rows to
-``BENCH_scaling.json`` so the perf trajectories (spectral gap, consensus
+partner-selection rows to ``BENCH_adaptive.json``, the K-scaling rows to
+``BENCH_scaling.json``, and the compression Pareto rows to
+``BENCH_compression.json`` so the perf trajectories (spectral gap, consensus
 error, wall-clock per round, scan-vs-python speedup, oscillation damping,
-sub-quadratic K-scaling) accumulate across PRs.  See benchmarks/README.md for the
+sub-quadratic K-scaling, bytes-vs-accuracy compression) accumulate across
+PRs.  See benchmarks/README.md for the
 file contract.  ``--only`` with an unknown name errors out listing the
 registry (a typo used to silently run nothing).
 
@@ -47,19 +49,22 @@ def main(argv=None) -> None:
     ap.add_argument("--scaling-json-out", default="BENCH_scaling.json",
                     help="where to write the K-scaling benchmark rows "
                          "('' disables)")
+    ap.add_argument("--compression-json-out", default="BENCH_compression.json",
+                    help="where to write the compression Pareto benchmark "
+                         "rows ('' disables)")
     args = ap.parse_args(argv)
 
     from benchmarks.adaptive import ALL_ADAPTIVE
     from benchmarks.figures import ALL_FIGURES
     from benchmarks.kernels import ALL_KERNELS
     from benchmarks.peer_axis import ALL_PEER_AXIS
-    from benchmarks.protocols import ALL_PROTOCOLS
+    from benchmarks.protocols import ALL_COMPRESSION, ALL_PROTOCOLS
     from benchmarks.roundloop import ALL_ROUNDLOOP, ALL_SCALING
     from benchmarks.schedules import ALL_SCHEDULES
 
     benches = {**ALL_KERNELS, **ALL_FIGURES, **ALL_SCHEDULES, **ALL_PROTOCOLS,
                **ALL_PEER_AXIS, **ALL_ROUNDLOOP, **ALL_ADAPTIVE,
-               **ALL_SCALING}
+               **ALL_SCALING, **ALL_COMPRESSION}
     only = set(args.only.split(",")) if args.only else None
     if only:
         # a typo'd --only used to silently run NOTHING (and exit 0) — fail
@@ -75,6 +80,7 @@ def main(argv=None) -> None:
     roundloop_rows = []
     adaptive_rows = []
     scaling_rows = []
+    compression_rows = []
     print("name,us_per_call,derived")
     for name, fn in benches.items():
         if only and name not in only:
@@ -95,6 +101,8 @@ def main(argv=None) -> None:
                 adaptive_rows += rows
             if name in ALL_SCALING:
                 scaling_rows += rows
+            if name in ALL_COMPRESSION:
+                compression_rows += rows
         except Exception:  # noqa: BLE001
             failures += 1
             print(f"{name},ERROR,0", flush=True)
@@ -121,6 +129,8 @@ def main(argv=None) -> None:
                   "--xla_force_host_platform_device_count=8)", file=sys.stderr)
         else:
             _write_rows(args.scaling_json_out, scaling_rows, "scaling")
+    if args.compression_json_out:
+        _write_rows(args.compression_json_out, compression_rows, "compression")
     if failures:
         sys.exit(1)
 

@@ -1,0 +1,106 @@
+"""Shared wire-bytes accounting for the benchmark surfaces.
+
+One audited formula per traffic pattern, so the analytic bytes column of
+``BENCH_scaling.json`` (ring-streamed segment mix) and the bytes-per-round
+Pareto rows of ``BENCH_compression.json`` (compressed gossip payloads) can
+never drift apart from hand-copied arithmetic.  Everything here is analytic —
+shapes and graph structure only, no device transfers are measured.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def ring_stream_bytes(
+    num_devices: int, num_values: int, itemsize: int = 4, steps: int = 1
+) -> float:
+    """Fleet-total bytes of ring-streaming ``num_values`` scalars once around
+    a ``num_devices`` ring, ``steps`` times.
+
+    Every device's block visits the other ``num_devices - 1`` slices exactly
+    once per step, so the whole fleet moves
+    ``steps * (num_devices - 1) * num_values * itemsize`` bytes.  This is the
+    segment-mix payload model behind ``scaling_k*``'s derived column.
+    """
+    return float(steps * (num_devices - 1) * num_values * itemsize)
+
+
+def message_nbytes(comp, params) -> float:
+    """Bytes ONE peer sends per directed edge per consensus step under
+    compressor ``comp``: the summed payload-array bytes of every leaf,
+    divided by the leading peer axis.
+
+    Uses ``jax.eval_shape`` so the accounting reads the compressor's actual
+    payload shapes/dtypes (values + indices + scales, whatever it ships)
+    instead of re-deriving them by hand.
+    """
+    total = 0.0
+    peers = None
+    for leaf in jax.tree.leaves(params):
+        payload = jax.eval_shape(comp.compress, jax.ShapeDtypeStruct(leaf.shape, leaf.dtype))
+        for arr in jax.tree.leaves(payload):
+            if peers is None:
+                peers = arr.shape[0]
+            total += float(np.prod(arr.shape)) * arr.dtype.itemsize
+    return total / max(peers or 1, 1)
+
+
+def mean_directed_edges(w_stack) -> float:
+    """Average number of directed off-diagonal nonzero edges per round of a
+    stacked ``(R, K, K)`` mixing schedule (a single ``(K, K)`` matrix counts
+    as one round).  Each nonzero ``W[k, j], k != j`` is one message ``j -> k``
+    on the wire.
+    """
+    w = np.asarray(jax.device_get(w_stack))
+    if w.ndim == 2:
+        w = w[None]
+    k = w.shape[-1]
+    off = w * (1.0 - np.eye(k))
+    return float(np.mean(np.sum(off != 0.0, axis=(-2, -1))))
+
+
+def gossip_bytes_per_round(w_stack, msg_bytes: float, consensus_steps: int = 1) -> float:
+    """Fleet-total gossip traffic per round: every directed edge of the
+    (average) round graph carries one ``msg_bytes`` message per consensus
+    step.  Push-sum adds its fp32 mass scalar on the same edges — callers
+    fold that into ``msg_bytes`` if they account for it.
+
+    This is the RAW (uncompressed) delivery model: a peer's message is only
+    needed where its mixing weight is nonzero, so inactive edges of a
+    time-varying schedule carry nothing that round.
+    """
+    return mean_directed_edges(w_stack) * msg_bytes * consensus_steps
+
+
+def union_directed_edges(w_stack) -> float:
+    """Directed off-diagonal edges active in ANY round of a stacked
+    ``(R, K, K)`` mixing schedule — the static lane set of the time-varying
+    graph (for round_robin(ring, star) at K=8: 26 vs a 15-edge round mean).
+    """
+    w = np.asarray(jax.device_get(w_stack))
+    if w.ndim == 2:
+        w = w[None]
+    k = w.shape[-1]
+    off = np.any(w * (1.0 - np.eye(k)) != 0.0, axis=0)
+    return float(np.sum(off))
+
+
+def estimate_gossip_bytes_per_round(
+    w_stack, msg_bytes: float, consensus_steps: int = 1
+) -> float:
+    """Fleet-total traffic per round for ESTIMATE-TRACKING (compressed)
+    gossip: one ``msg_bytes`` payload per consensus step on every UNION
+    edge of the schedule, active or not.
+
+    Compressed mixing runs against persistent public estimates ``x̂`` of
+    each in-neighbor, advanced by every payload the sender emits.  The
+    sender's own copy of ``x̂`` (the error-feedback reference) advances every
+    step, so a receiver that skipped the inactive rounds would hold a stale,
+    DIVERGENT estimate — sender and receiver copies must advance in
+    lockstep.  Payloads therefore flow on all union lanes every step, and
+    compression is charged for that standing traffic while the raw baseline
+    (``gossip_bytes_per_round``) pays only the round's active edges.  This
+    prices compression conservatively; the >= 10x gate holds anyway.
+    """
+    return union_directed_edges(w_stack) * msg_bytes * consensus_steps

@@ -105,6 +105,8 @@ def timevarying_k8(
     partner_rule: str = "loss_proximity",
     adaptive_eps: float = 0.1,
     adaptive_seed: int = 0,
+    compressor: str = "none",
+    topk_frac: float = 0.01,
 ) -> PaperExperiment:
     """Beyond-paper: 8 peers, 2 classes each, gossiping over a time-varying
     graph (pairwise random matchings, dropped links, peer churn on a ring —
@@ -133,6 +135,8 @@ def timevarying_k8(
             partner_rule=partner_rule,
             adaptive_eps=adaptive_eps,
             adaptive_seed=adaptive_seed,
+            compressor=compressor,
+            topk_frac=topk_frac,
         ),
         batch_size=10,
         samples_per_class=50,

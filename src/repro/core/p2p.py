@@ -61,6 +61,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compression as compression_lib
 from repro.core import consensus as consensus_lib
 from repro.core import graph as graph_lib
 from repro.core import protocols as protocols_lib
@@ -101,6 +102,9 @@ class P2PConfig:
     partner_rule: str = "loss_proximity"  # one of graph_lib.ADAPTIVE_RULES
     adaptive_eps: float = 0.1  # exploration probability for "eps_greedy"
     adaptive_seed: int = 0  # seeds the PRNG key threaded through P2PState
+    # -- consensus-payload compression (repro/compression) ------------------
+    compressor: str = "none"  # one of compression_lib.compressor_names()
+    topk_frac: float = 0.01  # kept fraction per leaf for compressor="topk"
 
     def __post_init__(self):
         if self.algorithm not in ALGORITHMS:
@@ -132,6 +136,13 @@ class P2PConfig:
             raise ValueError("adaptive_eps must be in [0, 1]")
         if self.schedule == "adaptive" and self.num_peers < 2:
             raise ValueError("adaptive partner selection needs at least two peers")
+        if self.compressor not in compression_lib.compressor_names():
+            raise ValueError(
+                f"unknown compressor {self.compressor!r}; one of "
+                f"{compression_lib.compressor_names()}"
+            )
+        if not 0.0 < self.topk_frac <= 1.0:
+            raise ValueError("topk_frac must be in (0, 1]")
         if self.schedule == "round_robin" and not self.round_robin_topologies:
             raise ValueError("round_robin schedule needs round_robin_topologies")
         object.__setattr__(
@@ -193,6 +204,15 @@ class P2PState(NamedTuple):
     unless ``cfg.schedule == "adaptive"``, in which case it carries the
     ``AdaptiveState`` (PRNG key + previous-round per-peer losses) that the
     round step consumes to build the round's topology on device.
+    ``compression`` is ``()`` unless ``cfg.compressor != "none"``, in which
+    case it carries the CHOCO-style public-estimate stack (zeros_like params
+    at init): every node's dense running estimate of every peer's parameters,
+    advanced by the decompressed payloads each consensus step — the
+    error-feedback residual is implicitly ``params - estimate``.  In the
+    sharded runtime this tree is REPLICATED per device, not peer-sharded
+    (``sharding.specs.peer_stacked_pspecs`` special-cases it): receivers need
+    every sender's estimate, and all replicas advance identically because
+    they see the same payloads.
     """
 
     params: PyTree
@@ -202,6 +222,7 @@ class P2PState(NamedTuple):
     round_idx: jax.Array  # scalar int32
     protocol: PyTree = ()  # consensus-protocol state (see protocols.py)
     adaptive: PyTree = ()  # AdaptiveState for schedule="adaptive", else ()
+    compression: PyTree = ()  # public-estimate stack for cfg.compressor != "none"
 
 
 def build_schedule(cfg: P2PConfig) -> graph_lib.GraphSchedule:
@@ -309,6 +330,7 @@ def init_state(
             key=jnp.broadcast_to(sel_key[None, :], (cfg.num_peers, 2)),
             last_losses=jnp.zeros((cfg.num_peers,), jnp.float32),
         )
+    comp = compression_lib.from_config(cfg)
     return P2PState(
         params=params,
         momentum=zeros,
@@ -317,6 +339,7 @@ def init_state(
         round_idx=jnp.zeros((), jnp.int32),
         protocol=proto.init_state(params, data_sizes),
         adaptive=adaptive,
+        compression=comp.init_estimate(params),
     )
 
 
@@ -432,6 +455,9 @@ def consensus_phase(
         return state._replace(round_idx=state.round_idx + 1)
 
     proto = protocols_lib.get_protocol(cfg.protocol)
+    comp = compression_lib.from_config(cfg)
+    if not comp.identity:
+        return _consensus_phase_compressed(state, cfg, consts, proto, comp)
     params, d_bias, proto_state = state.params, state.d_bias, state.protocol
     # Peers whose beta row is all-zero (isolated this round — e.g. churned
     # out of a time-varying schedule) have no neighbors to be biased toward:
@@ -461,6 +487,57 @@ def consensus_phase(
     return state._replace(
         params=params, d_bias=d_bias, protocol=proto_state,
         round_idx=state.round_idx + 1,
+    )
+
+
+def _consensus_phase_compressed(
+    state: P2PState,
+    cfg: P2PConfig,
+    consts: protocols_lib.ProtocolConstants,
+    proto: protocols_lib.ConsensusProtocol,
+    comp: compression_lib.Compressor,
+) -> P2PState:
+    """``consensus_phase`` when consensus messages cross a compressed wire.
+
+    Each step: ship the compressed parameter-to-estimate difference
+    (``C(x - x̂)``), advance the public-estimate stack in
+    ``P2PState.compression`` by its decompression (``x̂ <- x̂ + D(payload)``
+    — CHOCO-SGD's estimate tracking, see ``repro.compression``; the stack is
+    warm-started at the initial parameters), and run the protocol's
+    ``mix_compressed`` — the CONVEX form: self term on the TRUE parameters
+    (never on the wire), off-diagonal terms on the dense estimates, a
+    contraction that estimate lag cannot destabilize.  The affinity bias d
+    runs on estimate differences, ``d = (sum_j beta_kj x̂_j - x̂_k) / T``:
+    what receivers actually know of each other.  Push-sum mass rides
+    uncompressed inside ``mix_compressed``.
+    """
+    params, d_bias, proto_state = state.params, state.d_bias, state.protocol
+    est = state.compression
+    has_nbrs = jnp.sum(consts.beta, axis=1) > 0  # (K,)
+    for _ in range(cfg.consensus_steps):
+        _, est = compression_lib.ef_compress_tree(comp, params, est)
+        xhat = est
+        if cfg.use_affinity_d:
+            nbr_avg = consensus_lib.mix_stacked(consts.beta, xhat)
+            d_bias = jax.tree.map(
+                lambda avg, xh: jnp.where(
+                    has_nbrs.reshape((-1,) + (1,) * (xh.ndim - 1)),
+                    (avg - xh) / cfg.local_steps,
+                    jnp.zeros_like(xh),
+                ),
+                nbr_avg,
+                xhat,
+            )
+        proto_state, mixed = proto.mix_compressed(proto_state, params, xhat, consts)
+        if cfg.use_affinity_b:
+            mixed = jax.tree.map(
+                lambda m, b: m + cfg.eta_b * b, mixed, state.b_bias
+            )
+        params = mixed
+
+    return state._replace(
+        params=params, d_bias=d_bias, protocol=proto_state,
+        compression=est, round_idx=state.round_idx + 1,
     )
 
 
@@ -538,6 +615,11 @@ def consensus_phase_sharded(
         return state._replace(round_idx=state.round_idx + 1)
 
     proto = protocols_lib.get_protocol(cfg.protocol)
+    comp = compression_lib.from_config(cfg)
+    if not comp.identity:
+        return _consensus_phase_sharded_compressed(
+            state, cfg, consts, proto, comp, axis_name=axis_name, lanes=lanes
+        )
     k = consts.w.shape[-1]
     my = jax.lax.axis_index(axis_name)
     beta_row = jnp.take(consts.beta, my, axis=0)[None]  # (1, K)
@@ -626,6 +708,117 @@ def consensus_phase_sharded(
 
     return state._replace(
         params=params, d_bias=d_bias, protocol=proto_state,
+        round_idx=state.round_idx + 1,
+    )
+
+
+def _consensus_phase_sharded_compressed(
+    state: P2PState,
+    cfg: P2PConfig,
+    consts: protocols_lib.ProtocolConstants,
+    proto: protocols_lib.ConsensusProtocol,
+    comp: compression_lib.Compressor,
+    *,
+    axis_name: str,
+    lanes,
+) -> P2PState:
+    """``consensus_phase_sharded`` over a compressed wire.
+
+    What rides the wire changes: instead of each raw fp32 leaf, every array
+    of the leaf's compressed difference payload (top-k values + indices, or
+    int8 tensor + fp32 scale) is broadcast with one tiled ``all_gather`` per
+    payload array.  Broadcast — not the schedule's edge lanes — because the
+    CHOCO estimate stack demands it: each device holds the full (K, ...)
+    public-estimate stack REPLICATED in ``state.compression``
+    (``sharding.specs.peer_stacked_pspecs`` keeps it un-sharded), and the
+    replicas only stay consistent (provably so, for shard_map's replication
+    checker) if every device advances every row from the same payloads every
+    step.  This is the same semantics the vmap compressed runtime computes,
+    and the wire still never carries fp32 parameters.
+
+    The ``all_gather`` broadcast is a SIMULATOR artifact, not the modeled
+    traffic.  The modeled per-edge system stores estimate rows only for each
+    node's union in-neighbors and delivers payloads on every union lane of
+    the schedule every step (active or not — sender and receiver copies of
+    ``x̂`` must advance in lockstep); rows outside the union stay frozen at
+    the warm start and are never read, because their mixing and affinity
+    weights are zero in every round.  Its read-observable dynamics are
+    therefore identical to this simulation, and the analytic bytes model
+    prices exactly that standing union-lane traffic
+    (``benchmarks.wire.estimate_gossip_bytes_per_round``), not the K*(K-1)
+    gather.
+
+    After advancing the stack, the receiver substitutes its TRUE block for
+    its own row of a TEMPORARY copy of the stack (the convex mix's self term
+    is exact under any compressor; the carried estimate itself advances only
+    from payloads, so replicas stay consistent) and applies the protocol's
+    ordinary ``mix_sharded_leaf`` row arithmetic.  ``mix_sharded_begin`` is
+    untouched: push-sum's scalar mass lane stays uncompressed, so mass
+    conservation is exact.
+
+    Numerics note: this path is allclose — not bit-identical — to the vmap
+    compressed path (a (1, K)-row einsum on the estimate vs. the stacked
+    diag/off-diag split).  The bit-parity contract of the pod runtime applies
+    to ``compressor="none"``, which never enters here.
+    """
+    my = jax.lax.axis_index(axis_name)
+    beta_row = jnp.take(consts.beta, my, axis=0)[None]  # (1, K)
+    params, d_bias, proto_state = state.params, state.d_bias, state.protocol
+    has_nbrs = jnp.sum(beta_row, axis=1) > 0  # (1,)
+    b_bias_leaves = jax.tree.leaves(state.b_bias)
+    leaves, treedef = jax.tree.flatten(params)
+    e_leaves = jax.tree.leaves(state.compression)  # each (K, ...) replicated
+    for _ in range(cfg.consensus_steps):
+        # push-sum's scalar mass lane rides the schedule's edge lanes,
+        # uncompressed, exactly as on the identity path
+        proto_state, ctx = proto.mix_sharded_begin(
+            proto_state, consts.w, axis_name=axis_name, lanes=lanes
+        )
+        mixed_leaves, d_leaves, new_e = [], [], []
+        for i, x in enumerate(leaves):
+            est = e_leaves[i]
+            # sender side: this peer's difference to its own public estimate
+            my_est = jax.lax.dynamic_slice_in_dim(est, my, 1, axis=0)
+            payload = comp.compress(x - my_est)
+            gathered = jax.tree.map(
+                lambda a: jax.lax.all_gather(a, axis_name, axis=0, tiled=True),
+                payload,
+            )
+            # every replica advances the whole stack by the same payloads —
+            # including its own row, which must match what OTHER devices hold
+            # for this sender (never shortcut it with the true x)
+            est = est + comp.decompress(gathered, est)
+            my_est = jax.lax.dynamic_slice_in_dim(est, my, 1, axis=0)
+            d_i = None
+            if cfg.use_affinity_d:
+                # d on estimate differences (what receivers actually know of
+                # each other) — mirrors the vmap compressed path
+                nbr_avg = consensus_lib.mix_leaf(beta_row, est)
+                d_i = jnp.where(
+                    has_nbrs.reshape((-1,) + (1,) * (x.ndim - 1)),
+                    (nbr_avg - my_est) / cfg.local_steps,
+                    jnp.zeros_like(x),
+                )
+            # convex mix: the receiver's own row is its true block (the self
+            # term is exact under any compressor); only this TEMPORARY view
+            # is patched — the carried estimate advances from payloads alone
+            xhat_full = est.at[my].set(x[0])
+            m_i = proto.mix_sharded_leaf(ctx, x, xhat_full)
+            if cfg.use_affinity_b:
+                m_i = m_i + cfg.eta_b * b_bias_leaves[i]
+            mixed_leaves.append(m_i)
+            d_leaves.append(d_i)
+            new_e.append(est)
+        leaves = mixed_leaves
+        e_leaves = new_e
+        if cfg.use_affinity_d:
+            d_bias = jax.tree.unflatten(treedef, d_leaves)
+
+    return state._replace(
+        params=jax.tree.unflatten(treedef, leaves),
+        d_bias=d_bias,
+        protocol=proto_state,
+        compression=jax.tree.unflatten(treedef, e_leaves),
         round_idx=state.round_idx + 1,
     )
 
@@ -778,6 +971,13 @@ def _make_hier_round_step(
             "complete graph — O(K^2) by construction — which is exactly what "
             "the sparse degree-bounded path exists to avoid; run adaptive "
             "schedules with one peer per device, or a pretraced schedule here"
+        )
+    if cfg.compressor != "none":
+        raise ValueError(
+            f"compressor={cfg.compressor!r} is not supported on the "
+            "hierarchical (peers_per_device > 1) runtime: its bridge/segment "
+            "mixes stream raw fp32 blocks; run compressed gossip with one "
+            "peer per device (peers_per_device=1), or compressor='none' here"
         )
     if mix_mode not in MIX_MODES:
         raise ValueError(f"unknown mix_mode {mix_mode!r}; one of {MIX_MODES}")

@@ -125,6 +125,34 @@ class ConsensusProtocol:
         """One consensus step; returns (new proto_state, new params)."""
         raise NotImplementedError
 
+    def mix_compressed(
+        self,
+        proto_state: PyTree,
+        params: PyTree,
+        params_hat: PyTree,
+        consts: ProtocolConstants,
+    ) -> tuple[PyTree, PyTree]:
+        """``mix`` when receivers only see COMPRESSED neighbor payloads.
+
+        ``params`` is the true stacked tree; ``params_hat`` the shared
+        public-estimate stack every node reconstructs from the wire payloads
+        (``repro.compression``, WARM-STARTED at the initial parameters).
+        Implementations mix the CONVEX form: the self term — never on the
+        wire — uses the TRUE parameters (diagonal weights x ``params``), the
+        off-diagonal accumulation runs on the dense estimates.  This is a
+        contraction of ``x`` toward values the estimates bound, so estimate
+        lag cannot feed back into parameter growth; CHOCO's additive
+        correction form ``x + (mix(x_hat) - x_hat_self)`` was tried here and
+        diverges exponentially on the non-IID k8 workload at 1% top-k (the
+        own-estimate error enters with a POSITIVE sign and compounds through
+        local training).  Any protocol state (push-sum mass) rides
+        UNCOMPRESSED — only parameter leaves are estimated.  Returns
+        (new proto_state, new params).
+        """
+        raise NotImplementedError(
+            f"protocol {self.name!r} does not implement the compressed mix"
+        )
+
     def mix_sharded_begin(
         self,
         proto_state: PyTree,
@@ -265,6 +293,37 @@ class GossipProtocol(ConsensusProtocol):
     ) -> tuple[PyTree, PyTree]:
         return proto_state, consensus_lib.mix_stacked(consts.w, params)
 
+    def mix_compressed(
+        self,
+        proto_state: PyTree,
+        params: PyTree,
+        params_hat: PyTree,
+        consts: ProtocolConstants,
+    ) -> tuple[PyTree, PyTree]:
+        """Convex estimate-gossip: ``W_kk x_k + sum_{j != k} W_kj x_hat_j``.
+
+        Row-stochastic W makes this a convex combination of the true own
+        parameters and the (warm-started, payload-advanced) neighbor
+        estimates — exactly ``W x`` once the estimates converge, and
+        unconditionally bounded by them before that.
+        """
+        w = consts.w.astype(jnp.float32)
+        diag = jnp.diagonal(w)  # (K,)
+        w_off = w - jnp.diag(diag)
+
+        def leaf(x, xh):
+            feat = (1,) * (x.ndim - 1)
+            own = diag.reshape((-1,) + feat) * x.astype(jnp.float32)
+            nbr = jnp.einsum(
+                "kj,j...->k...",
+                w_off,
+                xh.astype(jnp.float32),
+                precision=jax.lax.Precision.HIGHEST,
+            )
+            return (own + nbr).astype(x.dtype)
+
+        return proto_state, jax.tree.map(leaf, params, params_hat)
+
     def mix_sharded_begin(
         self,
         proto_state: PyTree,
@@ -363,6 +422,38 @@ class PushSumProtocol(ConsensusProtocol):
             return out.astype(x.dtype)
 
         return PushSumState(mass=y_new), jax.tree.map(leaf, params)
+
+    def mix_compressed(
+        self,
+        proto_state: PushSumState,
+        params: PyTree,
+        params_hat: PyTree,
+        consts: ProtocolConstants,
+    ) -> tuple[PushSumState, PyTree]:
+        """Convex estimate-push-sum: the numerator's self term uses the true
+        biased parameters, the off-diagonal terms the (warm-started) biased
+        estimates; the (K,) mass and the resulting y' ride UNCOMPRESSED
+        (mass conservation sum y == K stays exact)."""
+        a = consts.w.astype(jnp.float32)
+        diag = jnp.diagonal(a)  # (K,)
+        a_off = a - jnp.diag(diag)
+        y = proto_state.mass.astype(jnp.float32)  # (K,)
+        y_new = jnp.einsum("kj,j->k", a, y, precision=jax.lax.Precision.HIGHEST)
+
+        def leaf(x, xh):
+            feat = (1,) * (x.ndim - 1)
+            yf = y.reshape((-1,) + feat)
+            own = diag.reshape((-1,) + feat) * (x.astype(jnp.float32) * yf)
+            nbr = jnp.einsum(
+                "kj,j...->k...",
+                a_off,
+                xh.astype(jnp.float32) * yf,
+                precision=jax.lax.Precision.HIGHEST,
+            )
+            out = (own + nbr) / y_new.reshape((-1,) + feat)
+            return out.astype(x.dtype)
+
+        return PushSumState(mass=y_new), jax.tree.map(leaf, params, params_hat)
 
     def mix_sharded_begin(
         self,

@@ -28,6 +28,37 @@ def consensus_mix_ref(x, nbrs, w_self, w_nbr, beta, local_steps: int):
     return mixed.astype(x.dtype), d_bias.astype(x.dtype)
 
 
+def dequant_mix_ref(
+    x, self_est, nbrs_est, nbrs_q, nbr_scale, w_self, w_nbr, beta,
+    local_steps: int,
+):
+    """Dense oracle for the fused dequantize-and-mix kernel.
+
+    x: (N,) f32 TRUE own parameters; self_est: (N,) f32 own public estimate;
+    nbrs_est: (D, N) f32 neighbor estimates; nbrs_q: (D, N) int8 difference
+    payloads; nbr_scale: (D,) fp32 scales.  Does exactly what the kernel
+    exists to avoid — materializes every ADVANCED fp32 neighbor copy
+    ``est + q * scale`` — then runs the unfused mix; the affinity d runs on
+    estimate differences (``nbr_avg - self_est``), mirroring the compressed
+    runtime.  The kernel (scale folded into the weights, accumulation
+    straight from int8) must be allclose to this in every cell.
+    """
+    xf = x.astype(jnp.float32)
+    nf = nbrs_est.astype(jnp.float32) + (
+        nbrs_q.astype(jnp.float32) * nbr_scale.astype(jnp.float32)[:, None]
+    )
+    mixed = w_self.astype(jnp.float32) * xf + jnp.einsum(
+        "d,dn->n", w_nbr.astype(jnp.float32), nf
+    )
+    nbr_avg = jnp.einsum("d,dn->n", beta.astype(jnp.float32), nf)
+    d_bias = jnp.where(
+        jnp.sum(beta.astype(jnp.float32)) > 0.0,
+        (nbr_avg - self_est.astype(jnp.float32)) / local_steps,
+        jnp.zeros_like(xf),
+    )
+    return mixed.astype(x.dtype), d_bias.astype(x.dtype)
+
+
 def segment_mix_ref(flat, w_mat, beta_mat, local_steps: int):
     """Dense oracle for the segment (edge-list) kernel, gossip form.
 

@@ -35,6 +35,7 @@ from repro.configs.p2pl_mnist import (
     timevarying_k2,
     timevarying_k8,
 )
+from repro import compression as compression_lib
 from repro.core import consensus as consensus_lib
 from repro.core import graph as graph_lib
 from repro.core import metrics as metrics_lib
@@ -96,6 +97,23 @@ def run_paper_experiment(
             "peers_per_device > 1 is the hierarchical sharded runtime — "
             "it needs peer_axis='pod' (the vmap runtime already holds every "
             "peer on one device)"
+        )
+    # fail fast — before data generation and tracing — on the combinations
+    # the hierarchical runtime rejects, with the documented workaround
+    if peers_per_device > 1 and exp.p2p.schedule == "adaptive":
+        raise ValueError(
+            "schedule='adaptive' is not supported with peers_per_device > 1: "
+            "the adaptive candidate set is the complete graph — dense O(K^2) "
+            "matrices the hierarchical runtime's sparse degree-bounded path "
+            "exists to avoid; run adaptive schedules with one peer per device "
+            "(peers_per_device=1), or use a pretraced schedule here"
+        )
+    if peers_per_device > 1 and exp.p2p.compressor != "none":
+        raise ValueError(
+            f"compressor={exp.p2p.compressor!r} is not supported with "
+            "peers_per_device > 1: the hierarchical bridge/segment mixes "
+            "stream raw fp32 blocks; run compressed gossip with one peer per "
+            "device (peers_per_device=1), or compressor='none' here"
         )
     if data is None:
         data = synthetic.mnist_like()
@@ -353,6 +371,18 @@ def main(argv=None):
                     choices=sorted(protocols_lib.protocol_names()),
                     help="consensus protocol (default: the experiment's own — "
                          "gossip everywhere except directed_k8's push_sum)")
+    ap.add_argument("--compressor", default=None,
+                    choices=sorted(compression_lib.compressor_names()),
+                    help="consensus-payload compression (repro/compression): "
+                         "'none' ships raw fp32 (bit-identical legacy path), "
+                         "'topk' keeps the --topk-frac largest-|h| entries "
+                         "per leaf, 'qint8' ships symmetric int8 + one fp32 "
+                         "scale per leaf; both carry an error-feedback "
+                         "residual so the dropped signal re-enters next round")
+    ap.add_argument("--topk-frac", type=float, default=0.01,
+                    help="fraction of entries the 'topk' compressor keeps per "
+                         "leaf (in (0, 1]; ~50x bytes reduction at 0.01 on "
+                         "the paper's 2NN)")
     ap.add_argument("--algorithm", default="p2pl_affinity",
                     help="algorithm for timevarying_* experiments")
     ap.add_argument("--out", default="")
@@ -360,6 +390,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if not 0.0 <= args.adaptive_eps <= 1.0:
         ap.error(f"--adaptive-eps must be in [0, 1], got {args.adaptive_eps}")
+    if not 0.0 < args.topk_frac <= 1.0:
+        ap.error(f"--topk-frac must be in (0, 1], got {args.topk_frac}")
 
     t0 = time.time()
     if args.experiment == "p2p_lm":
@@ -428,11 +460,31 @@ def main(argv=None):
         exp = dataclasses.replace(
             exp, p2p=dataclasses.replace(exp.p2p, protocol=args.protocol)
         )
+    if args.compressor and (exp.p2p.compressor != args.compressor
+                            or exp.p2p.topk_frac != args.topk_frac):
+        exp = dataclasses.replace(
+            exp, p2p=dataclasses.replace(
+                exp.p2p, compressor=args.compressor, topk_frac=args.topk_frac
+            )
+        )
     if args.peers_per_device < 1:
         ap.error(f"--peers-per-device must be >= 1, got {args.peers_per_device}")
     if args.peers_per_device > 1 and args.peer_axis != "pod":
         ap.error("--peers-per-device > 1 needs --peer-axis pod "
                  "(the hierarchical sharded runtime)")
+    if args.peers_per_device > 1 and exp.p2p.schedule == "adaptive":
+        ap.error("--schedule adaptive is not supported with "
+                 "--peers-per-device > 1: the adaptive candidate set is the "
+                 "complete graph — dense O(K^2) matrices the hierarchical "
+                 "runtime's sparse degree-bounded path exists to avoid. Run "
+                 "adaptive schedules with one peer per device "
+                 "(--peers-per-device 1), or use a pretraced schedule here.")
+    if args.peers_per_device > 1 and exp.p2p.compressor != "none":
+        ap.error(f"--compressor {exp.p2p.compressor} is not supported with "
+                 "--peers-per-device > 1: the hierarchical bridge/segment "
+                 "mixes stream raw fp32 blocks. Run compressed gossip with "
+                 "one peer per device (--peers-per-device 1), or "
+                 "--compressor none here.")
     if args.peer_axis == "pod":
         if exp.p2p.num_peers % args.peers_per_device:
             ap.error(

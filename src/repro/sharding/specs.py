@@ -200,6 +200,12 @@ def peer_stacked_pspecs(tree: PyTree, *, peer_axis="pod") -> PyTree:
     axis (params, momentum, biases, push-sum mass), the round counter is a
     replicated scalar.  Works on arrays, ShapeDtypeStructs, and tracers —
     ``make_sharded_round_fn`` builds its shard_map in/out specs with it.
+
+    One exception: a ``compression`` subtree (the CHOCO public-estimate stack
+    of the compressed-gossip runtime) is REPLICATED, leading axis included —
+    every device needs every sender's running estimate, and all replicas
+    advance identically from the broadcast payloads, so the stack is a true
+    replica, not a shard.
     """
 
     def one(leaf):
@@ -207,7 +213,12 @@ def peer_stacked_pspecs(tree: PyTree, *, peer_axis="pod") -> PyTree:
             return P()
         return P(peer_axis, *([None] * (leaf.ndim - 1)))
 
-    return jax.tree.map(one, tree)
+    specs = jax.tree.map(one, tree)
+    comp = getattr(tree, "compression", None)
+    if comp is not None and jax.tree.leaves(comp):
+        replicated = jax.tree.map(lambda leaf: P(*([None] * leaf.ndim)), comp)
+        specs = specs._replace(compression=replicated)
+    return specs
 
 
 def peer_batch_pspecs(tree: PyTree, *, peer_axis="pod") -> PyTree:

@@ -14,6 +14,7 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings  # noqa: E402
 from hypothesis import strategies as st  # noqa: E402
 
+from repro import compression as compression_lib  # noqa: E402
 from repro.core import consensus as cl  # noqa: E402
 from repro.core import graph as gl  # noqa: E402
 from repro.models import common  # noqa: E402
@@ -75,6 +76,83 @@ def test_consensus_error_monotone_under_gossip(k, steps, seed):
         x = cl.mix_stacked(w, x)
         errs.append(float(cl.consensus_error(x)))
     assert all(b <= a + 1e-6 for a, b in zip(errs, errs[1:]))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(2, 200),
+    frac=st.floats(0.01, 1.0),
+    seed=st.integers(0, 1000),
+)
+def test_property_topk_keeps_count_and_roundtrips(n, frac, seed):
+    """Top-k ships exactly keep(n) slots and the kept coordinates round-trip
+    bit for bit, for any leaf size and fraction."""
+    comp = compression_lib.TopKCompressor(frac)
+    leaf = jnp.asarray(
+        np.random.default_rng(seed).normal(size=(2, n)), jnp.float32
+    )
+    payload = comp.compress(leaf)
+    m = comp.keep(n)
+    assert 1 <= m <= n and payload.values.shape == (2, m)
+    dec = np.asarray(comp.decompress(payload, leaf))
+    src = np.asarray(leaf)
+    for row in range(2):
+        for slot, i in enumerate(np.asarray(payload.indices)[row]):
+            assert dec[row, i] == src[row, i]
+        # everything un-shipped decompresses to exactly zero
+        mask = np.ones(n, bool)
+        mask[np.asarray(payload.indices)[row]] = False
+        assert (dec[row, mask] == 0.0).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 300),
+    scale_mag=st.floats(1e-6, 1e3),
+    seed=st.integers(0, 1000),
+)
+def test_property_qint8_error_bounded(n, scale_mag, seed):
+    """Symmetric int8 round-trip error stays under half a quantization step
+    across magnitudes; all-zero rows are exact."""
+    comp = compression_lib.QInt8Compressor()
+    rng_ = np.random.default_rng(seed)
+    leaf = jnp.asarray(
+        np.concatenate([rng_.normal(size=(1, n)) * scale_mag,
+                        np.zeros((1, n))]), jnp.float32
+    )
+    payload = comp.compress(leaf)
+    out = np.asarray(comp.decompress(payload, leaf))
+    err = np.abs(out - np.asarray(leaf))
+    bound = np.asarray(payload.scale) / 2.0 + 1e-6 * scale_mag
+    assert (err <= bound).all()
+    assert (out[1] == 0.0).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    name=st.sampled_from(["topk", "qint8"]),
+    n=st.integers(4, 120),
+    frac=st.floats(0.05, 0.9),
+    seed=st.integers(0, 1000),
+)
+def test_property_error_feedback_contracts(name, n, frac, seed):
+    """Estimate tracking is a contraction toward a static target: after
+    enough steps the public estimate is closer to x than at the start, for
+    any compressor / leaf size / sparsity."""
+    comp = compression_lib.get_compressor(name, topk_frac=frac)
+    x = jnp.asarray(np.random.default_rng(seed).normal(size=(1, n)), jnp.float32)
+    est = jnp.zeros_like(x)
+    err0 = float(jnp.max(jnp.abs(x - est)))
+    for _ in range(40):
+        payload, est_new = compression_lib.ef_compress_leaf(comp, x, est)
+        # the advance is EXACTLY est + D(payload): what the receivers apply
+        # is what the sender's own estimate absorbs (replica lockstep)
+        np.testing.assert_array_equal(
+            np.asarray(est_new),
+            np.asarray(est + comp.decompress(payload, x)),
+        )
+        est = est_new
+    assert float(jnp.max(jnp.abs(x - est))) < 0.05 * max(err0, 1e-6)
 
 
 @settings(max_examples=15, deadline=None)
