@@ -3,11 +3,12 @@ benches.  Prints ``name,us_per_call,derived`` CSV (see figures.py/kernels.py)
 and serializes the consensus-protocol rows to ``BENCH_protocols.json``, the
 round-loop driver rows to ``BENCH_roundloop.json``, the adaptive
 partner-selection rows to ``BENCH_adaptive.json``, the K-scaling rows to
-``BENCH_scaling.json``, and the compression Pareto rows to
-``BENCH_compression.json`` so the perf trajectories (spectral gap, consensus
+``BENCH_scaling.json``, the compression Pareto rows to
+``BENCH_compression.json``, and the sync-vs-async straggler rows to
+``BENCH_straggler.json`` so the perf trajectories (spectral gap, consensus
 error, wall-clock per round, scan-vs-python speedup, oscillation damping,
-sub-quadratic K-scaling, bytes-vs-accuracy compression) accumulate across
-PRs.  See benchmarks/README.md for the
+sub-quadratic K-scaling, bytes-vs-accuracy compression, async
+wall-clock-to-accuracy) accumulate across PRs.  See benchmarks/README.md for the
 file contract.  ``--only`` with an unknown name errors out listing the
 registry (a typo used to silently run nothing).
 
@@ -52,6 +53,9 @@ def main(argv=None) -> None:
     ap.add_argument("--compression-json-out", default="BENCH_compression.json",
                     help="where to write the compression Pareto benchmark "
                          "rows ('' disables)")
+    ap.add_argument("--straggler-json-out", default="BENCH_straggler.json",
+                    help="where to write the sync-vs-async straggler "
+                         "benchmark rows ('' disables)")
     args = ap.parse_args(argv)
 
     from benchmarks.adaptive import ALL_ADAPTIVE
@@ -61,10 +65,11 @@ def main(argv=None) -> None:
     from benchmarks.protocols import ALL_COMPRESSION, ALL_PROTOCOLS
     from benchmarks.roundloop import ALL_ROUNDLOOP, ALL_SCALING
     from benchmarks.schedules import ALL_SCHEDULES
+    from benchmarks.straggler import ALL_STRAGGLER
 
     benches = {**ALL_KERNELS, **ALL_FIGURES, **ALL_SCHEDULES, **ALL_PROTOCOLS,
                **ALL_PEER_AXIS, **ALL_ROUNDLOOP, **ALL_ADAPTIVE,
-               **ALL_SCALING, **ALL_COMPRESSION}
+               **ALL_SCALING, **ALL_COMPRESSION, **ALL_STRAGGLER}
     only = set(args.only.split(",")) if args.only else None
     if only:
         # a typo'd --only used to silently run NOTHING (and exit 0) — fail
@@ -81,6 +86,7 @@ def main(argv=None) -> None:
     adaptive_rows = []
     scaling_rows = []
     compression_rows = []
+    straggler_rows = []
     print("name,us_per_call,derived")
     for name, fn in benches.items():
         if only and name not in only:
@@ -103,6 +109,8 @@ def main(argv=None) -> None:
                 scaling_rows += rows
             if name in ALL_COMPRESSION:
                 compression_rows += rows
+            if name in ALL_STRAGGLER:
+                straggler_rows += rows
         except Exception:  # noqa: BLE001
             failures += 1
             print(f"{name},ERROR,0", flush=True)
@@ -131,6 +139,8 @@ def main(argv=None) -> None:
             _write_rows(args.scaling_json_out, scaling_rows, "scaling")
     if args.compression_json_out:
         _write_rows(args.compression_json_out, compression_rows, "compression")
+    if args.straggler_json_out:
+        _write_rows(args.straggler_json_out, straggler_rows, "straggler")
     if failures:
         sys.exit(1)
 

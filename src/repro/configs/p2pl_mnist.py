@@ -265,6 +265,73 @@ def sharded_k8(
     )
 
 
+def straggler_k8(
+    schedule: str = "static",
+    protocol: str = "gossip",
+    algorithm: str = "p2pl_affinity",
+    local_steps: int = 8,
+    *,
+    steps_profile: str = "straggler",
+    staleness_bound: int = 3,
+    staleness_decay: float = 0.5,
+    straggler_frac: float = 0.25,
+    straggler_period: int = 4,
+    eta_d: float = 0.25,
+    topology: str = "ring",
+    schedule_rounds: int = 16,
+    round_robin_topologies: tuple = ("ring", "star"),
+) -> PaperExperiment:
+    """Beyond-paper: 8 non-IID peers with heterogeneous compute (stragglers).
+
+    Same learning problem as ``timevarying_k8`` (2 classes per peer on a
+    ring), but the last quarter of the fleet is 4x slower: under the
+    ``straggler`` compute profile they complete T/4 local steps per round and
+    only publish every 4th round.  With ``staleness_bound=3`` their neighbors
+    keep mixing the last *published* snapshot (age-decayed, renormalized per
+    the active protocol) instead of blocking the fleet — the bounded-staleness
+    async round of ``core/p2p.py``.  ``staleness_bound=0`` with a uniform
+    profile recovers the synchronous round bit for bit.
+
+    eta_d defaults to 0.25, HALF the sync experiments' 0.5: the affinity bias
+    is a feedback loop through the neighbors' states, and snapshot delay eats
+    its gain margin — at a 4-round staleness delay eta_d=0.5 diverges
+    (exponential d growth, NaN by round ~50) while 0.25 stays stable, the
+    same gain-margin arithmetic as observation O1's "eta_d=1.0 is marginally
+    stable at K=2" but with the margin halved again by the delay.
+
+        python -m repro.launch.train --experiment straggler_k8 \\
+            --steps-profile straggler --staleness-bound 3 --rounds 8
+    """
+    peer_classes = tuple(((2 * k) % 10, (2 * k + 1) % 10) for k in range(8))
+    return PaperExperiment(
+        name=f"straggler_k8_{schedule}_{protocol}_{steps_profile}_b{staleness_bound}",
+        p2p=P2PConfig(
+            algorithm=algorithm,
+            num_peers=8,
+            local_steps=local_steps,
+            consensus_steps=1,
+            lr=0.01,
+            momentum=0.0,
+            eta_d=eta_d,
+            topology=topology,
+            mixing="data_weighted",
+            schedule=schedule,
+            schedule_rounds=schedule_rounds,
+            round_robin_topologies=round_robin_topologies,
+            protocol=protocol,
+            steps_profile=steps_profile,
+            staleness_bound=staleness_bound,
+            staleness_decay=staleness_decay,
+            straggler_frac=straggler_frac,
+            straggler_period=straggler_period,
+        ),
+        batch_size=10,
+        samples_per_class=50,
+        rounds=60,
+        peer_classes=peer_classes,
+    )
+
+
 def noniid_k2(algorithm: str = "local_dsgd", local_steps: int = 10) -> PaperExperiment:
     """Fig. 3cd/6: K=2, pathological non-IID (A: {0,1}, B: {7,8})."""
     return PaperExperiment(

@@ -93,6 +93,7 @@ class CommGraph:
     directed: bool = False
 
     def __post_init__(self):
+        """Validate squareness, symmetry (if undirected), and no self loops."""
         a = np.asarray(self.adjacency, dtype=bool)
         if a.ndim != 2 or a.shape[0] != a.shape[1]:
             raise ValueError(f"adjacency must be square, got {a.shape}")
@@ -104,9 +105,11 @@ class CommGraph:
 
     @property
     def num_peers(self) -> int:
+        """K, the number of peers (rows of the adjacency)."""
         return self.adjacency.shape[0]
 
     def neighbors(self, k: int) -> np.ndarray:
+        """Peers that peer k sends to (out-neighbors; all nbrs if undirected)."""
         return np.nonzero(self.adjacency[k])[0]
 
     def in_neighbors(self, k: int) -> np.ndarray:
@@ -114,12 +117,15 @@ class CommGraph:
         return np.nonzero(self.adjacency[:, k])[0]
 
     def degree(self) -> np.ndarray:
+        """(K,) out-degree per peer (== in_degree for undirected graphs)."""
         return self.adjacency.sum(axis=1)
 
     def in_degree(self) -> np.ndarray:
+        """(K,) number of peers each peer receives from."""
         return self.adjacency.sum(axis=0)
 
     def out_degree(self) -> np.ndarray:
+        """(K,) number of peers each peer sends to."""
         return self.adjacency.sum(axis=1)
 
     def is_connected(self) -> bool:
@@ -400,6 +406,7 @@ class GraphSchedule:
     name: str = "static"
 
     def __post_init__(self):
+        """Validate a non-empty schedule with a uniform peer count."""
         graphs = tuple(self.graphs)
         if not graphs:
             raise ValueError("schedule needs at least one graph")
@@ -410,17 +417,21 @@ class GraphSchedule:
 
     @property
     def period(self) -> int:
+        """R, the number of graphs before the schedule repeats."""
         return len(self.graphs)
 
     @property
     def num_peers(self) -> int:
+        """K, shared by every graph in the schedule."""
         return self.graphs[0].num_peers
 
     @property
     def directed(self) -> bool:
+        """True iff ANY round's graph is directed (drives protocol checks)."""
         return any(g.directed for g in self.graphs)
 
     def graph_at(self, round_idx: int) -> CommGraph:
+        """The round's graph: periodic indexing ``round_idx % period``."""
         return self.graphs[round_idx % self.period]
 
     def max_degree(self) -> int:
@@ -435,6 +446,7 @@ class GraphSchedule:
         return CommGraph(adj, directed=self.directed)
 
     def union_is_connected(self) -> bool:
+        """Weak connectivity of the period union (B-connectivity check)."""
         return self.union_graph().is_connected()
 
     def union_is_strongly_connected(self) -> bool:
@@ -851,6 +863,7 @@ class SparseSchedule:
     name: str = "static"
 
     def __post_init__(self):
+        """Validate the padded (R, K, D) slot arrays and index bounds."""
         self_w = np.asarray(self.self_w, dtype=np.float64)
         nbr_idx = np.asarray(self.nbr_idx, dtype=np.int32)
         nbr_w = np.asarray(self.nbr_w, dtype=np.float64)
@@ -879,14 +892,17 @@ class SparseSchedule:
 
     @property
     def period(self) -> int:
+        """R, the number of rounds before the schedule repeats."""
         return self.self_w.shape[0]
 
     @property
     def num_peers(self) -> int:
+        """K, the number of peers."""
         return self.self_w.shape[1]
 
     @property
     def degree_bound(self) -> int:
+        """D, the padded per-peer neighbor-slot width."""
         return self.nbr_idx.shape[2]
 
     def round_edges(self, r: int) -> tuple[np.ndarray, np.ndarray, np.ndarray]:

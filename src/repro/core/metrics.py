@@ -33,6 +33,7 @@ class RoundLog:
         consensus_error: float | None = None,
         train_loss: float | None = None,
     ) -> None:
+        """Append one round's per-group accuracies and optional scalars."""
         for k, v in local_acc.items():
             self.after_local.setdefault(k, []).append(np.asarray(v, np.float64))
         for k, v in consensus_acc.items():
@@ -47,6 +48,7 @@ class RoundLog:
     # -- derived statistics -------------------------------------------------
 
     def series(self, group: str, phase: str = "consensus") -> np.ndarray:
+        """(rounds, ...) stacked accuracy series for a group and phase."""
         src = self.after_consensus if phase == "consensus" else self.after_local
         return np.stack(src[group])  # (rounds, ...) device-mean applied by caller
 
@@ -58,6 +60,7 @@ class RoundLog:
         return d.mean(axis=tuple(range(1, d.ndim))) if d.ndim > 1 else d
 
     def mean_oscillation(self, group: str, first_n: int | None = None) -> float:
+        """Mean per-round oscillation, optionally over the first N rounds."""
         o = self.oscillation(group)
         return float(o[:first_n].mean()) if first_n else float(o.mean())
 
@@ -66,6 +69,7 @@ class RoundLog:
         return float(self.oscillation(group).max())
 
     def final_accuracy(self, group: str, phase: str = "consensus", last_n: int = 5) -> float:
+        """Mean accuracy over the last ``last_n`` rounds (peer-averaged)."""
         s = self.series(group, phase)
         s = s.mean(axis=tuple(range(1, s.ndim))) if s.ndim > 1 else s
         return float(s[-last_n:].mean())
@@ -78,6 +82,7 @@ class RoundLog:
         return int(hits[0]) if len(hits) else -1
 
     def to_json(self) -> str:
+        """Serialize every recorded series to a JSON string."""
         def conv(d):
             return {k: np.stack(v).tolist() for k, v in d.items()}
 
@@ -93,6 +98,7 @@ class RoundLog:
 
     @staticmethod
     def from_json(s: str) -> "RoundLog":
+        """Inverse of ``to_json``: rebuild a RoundLog from its JSON string."""
         raw = json.loads(s)
         log = RoundLog()
         log.after_local = {k: [np.asarray(r) for r in v] for k, v in raw["after_local"].items()}

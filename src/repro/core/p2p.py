@@ -71,6 +71,16 @@ LossFn = Callable[[PyTree, Any], jax.Array]  # (per-peer params, per-peer batch)
 
 ALGORITHMS = ("dsgd", "local_dsgd", "p2pl", "p2pl_affinity", "isolated")
 
+# Config-declared per-peer compute profiles (``P2PConfig.steps_profile``):
+# "uniform" is the bulk-synchronous baseline (every peer runs the full T local
+# steps and publishes every round — structurally the legacy code path);
+# "straggler" slows the last ``round(K * straggler_frac)`` peers down by
+# ``straggler_period`` (fewer local steps per round, one publication every
+# ``straggler_period`` rounds); "linear" spreads compute speeds linearly from
+# 1 down to ``1 / straggler_period`` with every peer still publishing every
+# round (heterogeneous steps only, no staleness).
+STEPS_PROFILES = ("uniform", "straggler", "linear")
+
 
 @dataclasses.dataclass(frozen=True)
 class P2PConfig:
@@ -105,8 +115,15 @@ class P2PConfig:
     # -- consensus-payload compression (repro/compression) ------------------
     compressor: str = "none"  # one of compression_lib.compressor_names()
     topk_frac: float = 0.01  # kept fraction per leaf for compressor="topk"
+    # -- asynchronous rounds: compute profile + bounded-staleness gossip ----
+    steps_profile: str = "uniform"  # one of STEPS_PROFILES
+    staleness_bound: int = 0  # max snapshot age in rounds; 0 = synchronous
+    staleness_decay: float = 0.5  # weight decay base per round of staleness
+    straggler_frac: float = 0.25  # slow-peer fraction ("straggler" profile)
+    straggler_period: int = 4  # slowdown factor of the slowest peer
 
     def __post_init__(self):
+        """Validate the config and reject unsupported feature compositions."""
         if self.algorithm not in ALGORITHMS:
             raise ValueError(f"unknown algorithm {self.algorithm!r}")
         if self.algorithm == "dsgd" and (self.local_steps != 1 or self.consensus_steps != 1):
@@ -143,6 +160,37 @@ class P2PConfig:
             )
         if not 0.0 < self.topk_frac <= 1.0:
             raise ValueError("topk_frac must be in (0, 1]")
+        if self.steps_profile not in STEPS_PROFILES:
+            raise ValueError(
+                f"unknown steps_profile {self.steps_profile!r}; one of "
+                f"{STEPS_PROFILES}"
+            )
+        if self.staleness_bound < 0:
+            raise ValueError("staleness_bound must be >= 0 (0 = synchronous)")
+        if not 0.0 < self.staleness_decay <= 1.0:
+            raise ValueError("staleness_decay must be in (0, 1]")
+        if not 0.0 < self.straggler_frac <= 1.0:
+            raise ValueError("straggler_frac must be in (0, 1]")
+        if self.straggler_period < 1:
+            raise ValueError("straggler_period must be >= 1")
+        if self.staleness_bound > 0 and self.schedule == "adaptive":
+            raise ValueError(
+                "staleness_bound > 0 is not supported with schedule="
+                "'adaptive': the adaptive matching is derived from FRESH "
+                "per-peer losses every round, which is exactly what a "
+                "straggler cannot provide; run bounded-staleness gossip on a "
+                "pretraced schedule, or adaptive selection synchronously "
+                "(staleness_bound=0)"
+            )
+        if self.staleness_bound > 0 and self.compressor != "none":
+            raise ValueError(
+                f"staleness_bound > 0 is not supported with compressor="
+                f"{self.compressor!r}: the staleness buffer stores raw "
+                "sender snapshots while the compressed wire stores payload-"
+                "advanced estimates — composing the two buffers is an open "
+                "item; run async rounds uncompressed, or compression "
+                "synchronously (staleness_bound=0)"
+            )
         if self.schedule == "round_robin" and not self.round_robin_topologies:
             raise ValueError("round_robin schedule needs round_robin_topologies")
         object.__setattr__(
@@ -161,15 +209,63 @@ class P2PConfig:
 
     @property
     def use_affinity_d(self) -> bool:
+        """Whether the learning-phase affinity bias d (Eq. 3) is active."""
         return self.algorithm == "p2pl_affinity" and self.eta_d != 0.0
 
     @property
     def use_affinity_b(self) -> bool:
+        """Whether the consensus-phase affinity bias b (Eq. 4) is active."""
         return self.algorithm == "p2pl_affinity" and self.eta_b != 0.0
 
     @property
     def use_max_norm_init(self) -> bool:
+        """Whether peers synchronize to the max-norm init (Sec. IV-A)."""
         return self.max_norm_init or self.algorithm in ("p2pl", "p2pl_affinity")
+
+    @property
+    def use_async(self) -> bool:
+        """Whether any asynchronous-round machinery is active.
+
+        True iff the round is NOT the bulk-synchronous baseline: either
+        consensus mixes bounded-staleness snapshots (``staleness_bound > 0``)
+        or peers run heterogeneous local step counts (``steps_profile !=
+        "uniform"``).  False means the legacy synchronous code path runs
+        structurally unchanged (the fp32 bit-identity contract of
+        ``staleness_bound=0``).
+        """
+        return self.staleness_bound > 0 or self.steps_profile != "uniform"
+
+
+def compute_profile(cfg: P2PConfig) -> tuple[np.ndarray, np.ndarray]:
+    """Per-peer compute profile of a config: ``(steps_k, period_k)``.
+
+    Host-side (numpy, trace-time constant) arrays of shape (K,):
+
+    ``steps_k``   int32 — local SGD steps peer k completes per round
+                  (``<= cfg.local_steps``; the local-phase scan still runs
+                  the full T iterations, peers past their budget hold their
+                  parameters fixed so every runtime keeps one static shape).
+    ``period_k``  int32 — rounds between peer k's snapshot publications: a
+                  peer at speed ``1 / period_k`` finishes a local phase every
+                  ``period_k`` rounds of fast-peer wall-clock.  Delivery is
+                  additionally forced whenever a snapshot would otherwise
+                  exceed ``cfg.staleness_bound`` rounds of age.
+
+    Invariants: every entry of ``steps_k`` is >= 1 and every entry of
+    ``period_k`` is >= 1; the "uniform" profile returns (T, 1) for every peer.
+    """
+    k, t = cfg.num_peers, cfg.local_steps
+    steps = np.full((k,), t, np.int32)
+    period = np.ones((k,), np.int32)
+    if cfg.steps_profile == "straggler":
+        n_slow = max(1, int(round(k * cfg.straggler_frac)))
+        slow = np.arange(k) >= k - n_slow
+        steps[slow] = max(1, t // cfg.straggler_period)
+        period[slow] = cfg.straggler_period
+    elif cfg.steps_profile == "linear":
+        speed = np.linspace(1.0, 1.0 / cfg.straggler_period, k)
+        steps = np.maximum(1, np.round(t * speed)).astype(np.int32)
+    return steps, period
 
 
 class AdaptiveState(NamedTuple):
@@ -194,6 +290,30 @@ class AdaptiveState(NamedTuple):
     last_losses: jax.Array  # (K,) f32
 
 
+class StalenessState(NamedTuple):
+    """Bounded-staleness delivery buffer (``cfg.staleness_bound > 0``).
+
+    Sender-side snapshot model: a straggling peer fails to publish to ALL of
+    its out-neighbors at once, so one buffered snapshot per SENDER is exactly
+    the per-neighbor "last received state" — every receiver of peer j holds
+    the same stale copy — at O(params) instead of O(K * params) memory.  Both
+    leaves carry the stacked leading K axis (a (1, ...) block per mesh slice
+    in the pod runtime), so sharding specs, scan carry, and buffer donation
+    apply unchanged:
+
+    ``published``  params-shaped pytree — each sender's last published
+                   parameter snapshot, the source of every OFF-diagonal
+                   consensus term while the sender is between publications
+                   (the self term always uses the receiver's live params).
+    ``age``        (K,) int32 — rounds since each snapshot was taken.
+                   Invariant: ``age <= cfg.staleness_bound`` after every
+                   round (delivery is forced before the bound is crossed).
+    """
+
+    published: PyTree
+    age: jax.Array  # (K,) int32
+
+
 class P2PState(NamedTuple):
     """Stacked peer state; every leaf has leading axis K.
 
@@ -213,6 +333,12 @@ class P2PState(NamedTuple):
     (``sharding.specs.peer_stacked_pspecs`` special-cases it): receivers need
     every sender's estimate, and all replicas advance identically because
     they see the same payloads.
+    ``staleness`` is ``()`` unless ``cfg.staleness_bound > 0``, in which case
+    it carries the ``StalenessState`` (each sender's last published snapshot
+    + its integer age) that bounded-staleness consensus mixes in place of the
+    live neighbor parameters.  Unlike ``compression`` it IS peer-sharded in
+    the pod runtime (published rows ride the same ppermute lanes as live
+    parameters; only the (K,) ages are all-gathered).
     """
 
     params: PyTree
@@ -223,6 +349,7 @@ class P2PState(NamedTuple):
     protocol: PyTree = ()  # consensus-protocol state (see protocols.py)
     adaptive: PyTree = ()  # AdaptiveState for schedule="adaptive", else ()
     compression: PyTree = ()  # public-estimate stack for cfg.compressor != "none"
+    staleness: PyTree = ()  # StalenessState for cfg.staleness_bound > 0, else ()
 
 
 def build_schedule(cfg: P2PConfig) -> graph_lib.GraphSchedule:
@@ -331,6 +458,16 @@ def init_state(
             last_losses=jnp.zeros((cfg.num_peers,), jnp.float32),
         )
     comp = compression_lib.from_config(cfg)
+    staleness: PyTree = ()
+    if cfg.staleness_bound > 0:
+        # warm start: every sender's first snapshot is its (possibly
+        # max-norm-synced) init, age 0 — exactly what a synchronous round 0
+        # would deliver.  jnp.copy, not an alias: the scan driver donates the
+        # state, and a buffer appearing under two leaves cannot be donated
+        staleness = StalenessState(
+            published=jax.tree.map(jnp.copy, params),
+            age=jnp.zeros((cfg.num_peers,), jnp.int32),
+        )
     return P2PState(
         params=params,
         momentum=zeros,
@@ -340,6 +477,7 @@ def init_state(
         protocol=proto.init_state(params, data_sizes),
         adaptive=adaptive,
         compression=comp.init_estimate(params),
+        staleness=staleness,
     )
 
 
@@ -355,6 +493,7 @@ def _local_phase_stats(
     cfg: P2PConfig,
     *,
     axis_name: str | None = None,
+    steps_k: jax.Array | None = None,
 ) -> tuple[P2PState, jax.Array]:
     """``local_phase`` returning the full (T, K) per-step per-peer losses.
 
@@ -369,6 +508,17 @@ def _local_phase_stats(
     the leaves seen here are (1, ...) blocks: the (T, 1) per-step losses then
     all-gather the K per-peer scalars, so any later reduction runs over the
     same (T, K) buffer — and produces the same bits — as the vmap runtime.
+
+    ``steps_k`` (int32, leading axis matching the stacked leaves: (K,) in the
+    vmap runtime, this peer's (1,) block in the pod runtime) caps peer k at
+    ``steps_k[k]`` local updates: the scan still runs the full T iterations —
+    one static shape for every compute profile — but iterations at or past a
+    peer's budget hold its parameters and momentum fixed (``jnp.where`` on
+    the traced step index, so heterogeneous profiles share one compile).
+    Losses keep reporting all T slots; a finished peer re-reports its frozen
+    parameters' loss on each later step's batch.  ``None`` (the "uniform"
+    profile) is the structurally unmasked legacy scan — the bit-identity
+    baseline.
     """
     # one forward serves both the loss value and the gradient: cheaper than
     # separate vmap(loss)/vmap(grad) passes, and it pins the loss to the same
@@ -377,26 +527,43 @@ def _local_phase_stats(
     # the runtimes' bit-parity contract on the reported losses)
     value_and_grad_fn = jax.value_and_grad(loss_fn)
 
-    def step(carry, batch_t):
+    def step(carry, xs):
         params, mom = carry
+        batch_t = xs if steps_k is None else xs[0]
         losses, grads = jax.vmap(value_and_grad_fn)(params, batch_t)
         if cfg.momentum:
-            mom = jax.tree.map(lambda m, g: cfg.momentum * m + g, mom, grads)
-            update = mom
+            new_mom = jax.tree.map(lambda m, g: cfg.momentum * m + g, mom, grads)
+            update = new_mom
         else:
+            new_mom = mom
             update = grads
         if cfg.use_affinity_d:
-            params = jax.tree.map(
+            new_params = jax.tree.map(
                 lambda w, u, d: w - cfg.lr * u + cfg.eta_d * d,
                 params,
                 update,
                 state.d_bias,  # d fixed during the local phase (Sec. IV-A)
             )
         else:
-            params = jax.tree.map(lambda w, u: w - cfg.lr * u, params, update)
-        return (params, mom), losses
+            new_params = jax.tree.map(lambda w, u: w - cfg.lr * u, params, update)
+        if steps_k is not None:
+            active = xs[1] < steps_k  # (K,) or (1,) bool
 
-    (params, mom), losses = jax.lax.scan(step, (state.params, state.momentum), batches)
+            def keep(new, old):
+                mask = active.reshape((-1,) + (1,) * (old.ndim - 1))
+                return jnp.where(mask, new, old)
+
+            new_params = jax.tree.map(keep, new_params, params)
+            if cfg.momentum:
+                new_mom = jax.tree.map(keep, new_mom, mom)
+        return (new_params, new_mom), losses
+
+    xs = (
+        batches
+        if steps_k is None
+        else (batches, jnp.arange(cfg.local_steps, dtype=jnp.int32))
+    )
+    (params, mom), losses = jax.lax.scan(step, (state.params, state.momentum), xs)
     # cross-peer reductions OUTSIDE the scan, on the materialized (T, K)
     # buffer: an in-scan mean compiles differently in the (XLA-peeled) first
     # iteration than in the loop body, so the vmap and shard_map runtimes
@@ -420,14 +587,17 @@ def local_phase(
     cfg: P2PConfig,
     *,
     axis_name: str | None = None,
+    steps_k: jax.Array | None = None,
 ) -> tuple[P2PState, jax.Array]:
-    """Run T local steps on every peer.
+    """Run up to T local steps on every peer.
 
     batches: pytree whose leaves are (T, K, ...) — step-major, then peer.
-    Returns (new_state, per-step mean loss (T,)).
+    ``steps_k`` (optional per-peer int32 budget, see ``_local_phase_stats``)
+    caps how many of the T steps each peer applies.  Returns (new_state,
+    per-step mean loss (T,)).
     """
     state, losses = _local_phase_stats(
-        state, loss_fn, batches, cfg, axis_name=axis_name
+        state, loss_fn, batches, cfg, axis_name=axis_name, steps_k=steps_k
     )
     return state, jnp.mean(losses, axis=1)  # (T,) per-step mean over peers
 
@@ -458,6 +628,8 @@ def consensus_phase(
     comp = compression_lib.from_config(cfg)
     if not comp.identity:
         return _consensus_phase_compressed(state, cfg, consts, proto, comp)
+    if cfg.staleness_bound > 0:
+        return _consensus_phase_async(state, cfg, consts, proto)
     params, d_bias, proto_state = state.params, state.d_bias, state.protocol
     # Peers whose beta row is all-zero (isolated this round — e.g. churned
     # out of a time-varying schedule) have no neighbors to be biased toward:
@@ -541,21 +713,132 @@ def _consensus_phase_compressed(
     )
 
 
+def _staleness_delivery(
+    cfg: P2PConfig, round_idx: jax.Array, age: jax.Array
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One async round's delivery decision from the full (K,) snapshot ages.
+
+    Returns ``(delivered, new_age, decay)``, all (K,):
+
+    ``delivered``  bool — sender k publishes a fresh snapshot this round,
+                   either on its compute schedule (every ``period_k`` rounds
+                   of the config's profile) or FORCED because its snapshot
+                   would otherwise exceed ``cfg.staleness_bound`` rounds of
+                   age — the bounded-staleness guarantee.  Traced per-round
+                   booleans: the mask gates buffer updates only, never the
+                   (static) communication structure, so one compile covers
+                   every round.
+    ``new_age``    int32 — post-delivery snapshot ages (0 where delivered);
+                   invariant ``new_age <= cfg.staleness_bound``.
+    ``decay``      f32 — ``staleness_decay ** new_age``, the per-SENDER
+                   weight multiplier of this round's mix (1.0 for fresh
+                   snapshots).
+
+    Both runtimes call this on the same (K,) age vector (the pod runtime
+    all-gathers its K scalar ages first), so the delivery pattern — and with
+    it the round's effective mixing matrix — is identical across runtimes.
+    """
+    _, periods_np = compute_profile(cfg)
+    periods = jnp.asarray(periods_np)  # (K,) int32, trace-time constant
+    scheduled = jax.lax.rem(round_idx, periods) == periods - 1
+    delivered = scheduled | (age + 1 > cfg.staleness_bound)
+    new_age = jnp.where(delivered, 0, age + 1)
+    base = jnp.asarray(cfg.staleness_decay, jnp.float32)
+    decay = base ** new_age.astype(jnp.float32)
+    return delivered, new_age, decay
+
+
+def _consensus_phase_async(
+    state: P2PState,
+    cfg: P2PConfig,
+    consts: protocols_lib.ProtocolConstants,
+    proto: protocols_lib.ConsensusProtocol,
+) -> P2PState:
+    """``consensus_phase`` under bounded-staleness delivery (vmap runtime).
+
+    Each round: decide delivery per sender (``_staleness_delivery``), advance
+    the ``StalenessState`` buffer (``published`` rows of delivering senders
+    become their live post-local-phase parameters; ages reset or increment),
+    then run the S consensus steps on the BUFFER — every off-diagonal term
+    reads the sender's last published snapshot — with age-decayed weights
+    renormalized per the protocol's stochasticity
+    (``protocols.age_decayed_constants``): stale senders' outgoing weights
+    shrink by ``staleness_decay ** age`` and the freed mass moves onto the
+    diagonal, keeping gossip rows and push-sum columns stochastic, so
+    push-sum mass conservation survives stale delivery exactly.
+
+    The mix itself is the protocol's ``mix_compressed`` — the convex
+    self-on-true-params / off-diagonal-on-substitute split is the same
+    contraction whether the substitute is a compressed estimate or a stale
+    snapshot.  Delivery happens once per ROUND: all S steps of a round mix
+    the same buffer (a straggler cannot publish mid-round).  The affinity
+    bias d also reads the buffer with the decayed beta — receivers can only
+    be biased toward what they have actually received.
+    """
+    st: StalenessState = state.staleness
+    delivered, age, decay = _staleness_delivery(cfg, state.round_idx, st.age)
+    published = jax.tree.map(
+        lambda p, q: jnp.where(
+            delivered.reshape((-1,) + (1,) * (p.ndim - 1)), p, q
+        ),
+        state.params,
+        st.published,
+    )
+    a_consts = protocols_lib.age_decayed_constants(
+        consts, decay, proto.stochasticity
+    )
+    params, d_bias, proto_state = state.params, state.d_bias, state.protocol
+    # neighbor support is read from the UNDECAYED beta: decay shrinks weights
+    # but never disconnects a peer, so isolation (d = 0) matches the
+    # synchronous rule
+    has_nbrs = jnp.sum(consts.beta, axis=1) > 0  # (K,)
+    for _ in range(cfg.consensus_steps):
+        if cfg.use_affinity_d:
+            nbr_avg = consensus_lib.mix_stacked(a_consts.beta, published)
+            d_bias = jax.tree.map(
+                lambda avg, w: jnp.where(
+                    has_nbrs.reshape((-1,) + (1,) * (w.ndim - 1)),
+                    (avg - w) / cfg.local_steps,
+                    jnp.zeros_like(w),
+                ),
+                nbr_avg,
+                params,
+            )
+        proto_state, mixed = proto.mix_compressed(
+            proto_state, params, published, a_consts
+        )
+        if cfg.use_affinity_b:
+            mixed = jax.tree.map(
+                lambda m, b: m + cfg.eta_b * b, mixed, state.b_bias
+            )
+        params = mixed
+
+    return state._replace(
+        params=params, d_bias=d_bias, protocol=proto_state,
+        staleness=StalenessState(published=published, age=age),
+        round_idx=state.round_idx + 1,
+    )
+
+
 def run_round(
     state: P2PState,
     loss_fn: LossFn,
     batches: PyTree,
     cfg: P2PConfig,
     consts: protocols_lib.ProtocolConstants,
+    *,
+    steps_k: jax.Array | None = None,
 ) -> tuple[P2PState, P2PState, jax.Array]:
     """One full round: local phase then consensus phase.
 
-    ``consts`` is the round's (K, K) ``ProtocolConstants`` slice.  Returns
-    (state_after_local, state_after_consensus, local losses (T,)) so callers
-    can evaluate test accuracy at both phase boundaries — the paper's central
-    measurement (Figs. 2-6).
+    ``consts`` is the round's (K, K) ``ProtocolConstants`` slice; ``steps_k``
+    the optional (K,) per-peer local-step budget of a heterogeneous compute
+    profile (see ``compute_profile``).  Returns (state_after_local,
+    state_after_consensus, local losses (T,)) so callers can evaluate test
+    accuracy at both phase boundaries — the paper's central measurement
+    (Figs. 2-6).
     """
-    after_local, losses = local_phase(state, loss_fn, batches, cfg)
+    after_local, losses = local_phase(state, loss_fn, batches, cfg, steps_k=steps_k)
     after_consensus = consensus_phase(after_local, cfg, consts)
     return after_local, after_consensus, losses
 
@@ -619,6 +902,10 @@ def consensus_phase_sharded(
     if not comp.identity:
         return _consensus_phase_sharded_compressed(
             state, cfg, consts, proto, comp, axis_name=axis_name, lanes=lanes
+        )
+    if cfg.staleness_bound > 0:
+        return _consensus_phase_sharded_async(
+            state, cfg, consts, proto, axis_name=axis_name, lanes=lanes
         )
     k = consts.w.shape[-1]
     my = jax.lax.axis_index(axis_name)
@@ -823,6 +1110,108 @@ def _consensus_phase_sharded_compressed(
     )
 
 
+def _consensus_phase_sharded_async(
+    state: P2PState,
+    cfg: P2PConfig,
+    consts: protocols_lib.ProtocolConstants,
+    proto: protocols_lib.ConsensusProtocol,
+    *,
+    axis_name: str,
+    lanes,
+) -> P2PState:
+    """``consensus_phase_sharded`` under bounded-staleness delivery.
+
+    The same round semantics as the vmap ``_consensus_phase_async``, one peer
+    per mesh slice.  The cheap cross-peer exchange is one ``all_gather`` of
+    the K scalar snapshot AGES (the adaptive schedule's K-losses pattern):
+    every peer then computes the same (K,) delivery mask and the same
+    renormalized (K, K) decayed constants from the replicated round slice.
+    Published SNAPSHOT rows — not live parameters — ride the schedule's
+    static ppermute lanes; the delivery mask only gates which rows of the
+    buffer were refreshed before the sends, so the lane structure (and the
+    one-compile property) is untouched by who straggles when.
+
+    Because a round's published buffer is FIXED across its S consensus steps
+    (delivery is per round), each leaf is gathered once before the step loop
+    instead of per step — the async path trades the sync path's leaf
+    pipelining for S-fold fewer lane transfers.  The mix is the protocol's
+    ``mix_split_sharded_begin`` / ``mix_split_sharded_leaf`` pair: this
+    peer's row of the vmap path's diagonal/off-diagonal decomposition,
+    operation for operation (self term elementwise on the true block,
+    off-diagonal einsum row on the snapshot stack), which keeps the async
+    pod runtime fp32 BIT-IDENTICAL to the vmap ``_consensus_phase_async`` —
+    the same parity contract as the synchronous paths.  Push-sum's mass
+    lane rides inside ``mix_split_sharded_begin`` on the same decayed
+    matrix, so the renormalized column sums — and mass conservation — hold
+    exactly.
+    """
+    k = consts.w.shape[-1]
+    my = jax.lax.axis_index(axis_name)
+    st: StalenessState = state.staleness  # published (1, ...), age (1,)
+    age_full = jax.lax.all_gather(st.age, axis_name, axis=0, tiled=True)  # (K,)
+    delivered, age_full_new, decay = _staleness_delivery(
+        cfg, state.round_idx, age_full
+    )
+    del_mine = jax.lax.dynamic_slice(delivered, (my,), (1,))  # (1,) bool
+    published = jax.tree.map(
+        lambda p, q: jnp.where(
+            del_mine.reshape((-1,) + (1,) * (p.ndim - 1)), p, q
+        ),
+        state.params,
+        st.published,
+    )
+    age_mine = jax.lax.dynamic_slice(age_full_new, (my,), (1,))
+    a_consts = protocols_lib.age_decayed_constants(
+        consts, decay, proto.stochasticity
+    )
+    beta_row = jnp.take(a_consts.beta, my, axis=0)[None]  # (1, K), decayed
+    has_nbrs = jnp.sum(jnp.take(consts.beta, my, axis=0)[None], axis=1) > 0  # (1,)
+    params, d_bias, proto_state = state.params, state.d_bias, state.protocol
+    b_bias_leaves = jax.tree.leaves(state.b_bias)
+    leaves, treedef = jax.tree.flatten(params)
+    pub_full_leaves = [
+        consensus_lib.gather_peer_leaf(pl, axis_name, lanes, k)
+        for pl in jax.tree.leaves(published)
+    ]
+    for _ in range(cfg.consensus_steps):
+        proto_state, ctx = proto.mix_split_sharded_begin(
+            proto_state, a_consts.w, axis_name=axis_name, lanes=lanes
+        )
+        mixed_leaves, d_leaves = [], []
+        for i, x in enumerate(leaves):
+            pub_full = pub_full_leaves[i]
+            d_i = None
+            if cfg.use_affinity_d:
+                # d from the snapshot stack as carried (own row = own
+                # published block) — mirrors the vmap async path, which
+                # mixes beta over the buffer itself
+                nbr_avg = consensus_lib.mix_leaf(beta_row, pub_full)
+                d_i = jnp.where(
+                    has_nbrs.reshape((-1,) + (1,) * (x.ndim - 1)),
+                    (nbr_avg - x) / cfg.local_steps,
+                    jnp.zeros_like(x),
+                )
+            # convex split: self term on the true block (diagonal weight),
+            # off-diagonal accumulation on the snapshot stack — the own row
+            # of pub_full is never read
+            m_i = proto.mix_split_sharded_leaf(ctx, x, pub_full)
+            if cfg.use_affinity_b:
+                m_i = m_i + cfg.eta_b * b_bias_leaves[i]
+            mixed_leaves.append(m_i)
+            d_leaves.append(d_i)
+        leaves = mixed_leaves
+        if cfg.use_affinity_d:
+            d_bias = jax.tree.unflatten(treedef, d_leaves)
+
+    return state._replace(
+        params=jax.tree.unflatten(treedef, leaves),
+        d_bias=d_bias,
+        protocol=proto_state,
+        staleness=StalenessState(published=published, age=age_mine),
+        round_idx=state.round_idx + 1,
+    )
+
+
 MIX_MODES = ("auto", "bridge", "segment")
 _BRIDGE_MAX_PEERS = 64  # "auto" uses the bit-parity bridge mix up to here
 
@@ -979,6 +1368,15 @@ def _make_hier_round_step(
             "mixes stream raw fp32 blocks; run compressed gossip with one "
             "peer per device (peers_per_device=1), or compressor='none' here"
         )
+    if cfg.use_async:
+        raise ValueError(
+            f"asynchronous rounds (steps_profile={cfg.steps_profile!r}, "
+            f"staleness_bound={cfg.staleness_bound}) are not supported on "
+            "the hierarchical (peers_per_device > 1) runtime: its "
+            "bridge/segment mixes stream live parameter blocks with no "
+            "staleness buffer; run async rounds with one peer per device "
+            "(peers_per_device=1), or the uniform synchronous profile here"
+        )
     if mix_mode not in MIX_MODES:
         raise ValueError(f"unknown mix_mode {mix_mode!r}; one of {MIX_MODES}")
     num_devices, _ = specs_lib.hierarchical_layout(
@@ -1114,6 +1512,13 @@ def _make_round_step(
         None if data_sizes is None
         else jnp.asarray(np.asarray(data_sizes), jnp.float32)
     )
+    # heterogeneous per-peer step budgets (None for "uniform": the masked
+    # scan is never built, so the synchronous path stays structurally — and
+    # bit-for-bit — the legacy one)
+    steps_dev: jax.Array | None = None
+    if cfg.steps_profile != "uniform":
+        steps_np, _ = compute_profile(cfg)
+        steps_dev = jnp.asarray(steps_np)  # (K,) int32
 
     def adaptive_consts(ad: "AdaptiveState", losses_full: jax.Array):
         """(this round's ProtocolConstants, next round's key) from run state.
@@ -1139,7 +1544,7 @@ def _make_round_step(
                 ad = state.adaptive
                 consts, key_next = adaptive_consts(ad, ad.last_losses)
                 after_local, losses_tk = _local_phase_stats(
-                    state, loss_fn, batches, cfg
+                    state, loss_fn, batches, cfg, steps_k=steps_dev
                 )
                 new_ad = AdaptiveState(
                     key=jnp.broadcast_to(key_next[None, :], ad.key.shape),
@@ -1161,7 +1566,9 @@ def _make_round_step(
         def step(state: P2PState, batches: PyTree):
             idx = jax.lax.rem(state.round_idx, jnp.int32(period))
             return run_round(
-                state, loss_fn, batches, cfg, protocols_lib.round_constants(consts, idx)
+                state, loss_fn, batches, cfg,
+                protocols_lib.round_constants(consts, idx),
+                steps_k=steps_dev,
             )
 
         return step
@@ -1178,6 +1585,14 @@ def _make_round_step(
     shard_map = _shard_map_fn()
     from jax.sharding import PartitionSpec as P
 
+    def my_steps_block():
+        # this peer's (1,) slice of the replicated (K,) step budgets (None
+        # for the uniform profile — the unmasked legacy scan)
+        if steps_dev is None:
+            return None
+        my = jax.lax.axis_index(axis_name)
+        return jax.lax.dynamic_slice(steps_dev, (my,), (1,))
+
     if adaptive:
         # Any pair may be matched on any round, so the candidate lane set
         # covers the COMPLETE graph: the ppermute structure (lanes and their
@@ -1190,7 +1605,8 @@ def _make_round_step(
 
         def block_adaptive(state: P2PState, batches: PyTree):
             after_local, losses_tk = _local_phase_stats(
-                state, loss_fn, batches, cfg, axis_name=axis_name
+                state, loss_fn, batches, cfg, axis_name=axis_name,
+                steps_k=my_steps_block(),
             )
             ad = state.adaptive
             # the cheap K-vector exchange: each peer contributes one scalar
@@ -1234,7 +1650,8 @@ def _make_round_step(
         # the (T,) output is replicated — and reduced over the same (K,)
         # vector as the vmap runtime
         after_local, losses = local_phase(
-            state, loss_fn, batches, cfg, axis_name=axis_name
+            state, loss_fn, batches, cfg, axis_name=axis_name,
+            steps_k=my_steps_block(),
         )
         idx = jax.lax.rem(state.round_idx, jnp.int32(period))
         consts = protocols_lib.round_constants(

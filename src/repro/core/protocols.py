@@ -66,6 +66,56 @@ def round_constants(consts: ProtocolConstants, idx) -> ProtocolConstants:
     return ProtocolConstants(w=consts.w[idx], beta=consts.beta[idx])
 
 
+def age_decayed_constants(
+    consts: ProtocolConstants, decay: jax.Array, stochasticity: str
+) -> ProtocolConstants:
+    """One async round's renormalized age-decayed mixing constants.
+
+    Bounded-staleness consensus (``p2p._consensus_phase_async``) mixes each
+    SENDER j's last published snapshot with its weight scaled by ``decay[j]``
+    (``staleness_decay ** age_j`` in (0, 1]; 1.0 = fresh).  Scaling alone
+    would break stochasticity, so the freed mass is absorbed by the
+    DIAGONAL — the one term that never rides the wire and is always fresh:
+
+    * ``stochasticity="row"`` (gossip): off-diagonal entry (k, j) becomes
+      ``w_kj * decay_j``; the diagonal is rebuilt as ``1 - sum_j'`` of the
+      row's decayed off-diagonals, so every row still sums to 1 and the mix
+      stays a convex combination (receivers lean toward their own live
+      params when their in-neighbors are stale).
+    * ``stochasticity="column"`` (push_sum): the same off-diagonal scaling,
+      diagonal rebuilt from COLUMN sums — a stale sender keeps the mass it
+      could not ship — so every column still sums to 1 and push-sum mass
+      conservation (``sum_k y_k == K``) survives stale delivery exactly (up
+      to one fp rounding of the ``1 - sum`` per column).
+
+    ``beta`` (the affinity-average weights, rows summing to 1 over
+    in-neighbors) is decayed per sender and then ROW-renormalized back to a
+    distribution: the affinity average leans toward fresher neighbors but
+    remains an average of received states.  Scaling without renormalizing
+    would shrink ``nbr_avg`` toward the origin (rows summing to < 1), and
+    the bias ``d = (nbr_avg - w) / T`` would then drag every parameter
+    toward zero each local step — enough to stall learning outright on the
+    straggler workload.  All-zero rows (isolated peers) stay zero.
+
+    Args: ``consts`` — one round's (K, K) slice; ``decay`` — (K,) f32
+    per-sender multipliers; ``stochasticity`` — the active protocol's
+    declared normalization.  With ``decay == 1`` everywhere the result
+    equals ``consts`` up to fp reassociation of the diagonal.
+    """
+    if stochasticity not in ("row", "column"):
+        raise ValueError(f"unknown stochasticity {stochasticity!r}")
+    w = consts.w.astype(jnp.float32)
+    decay = decay.astype(jnp.float32)
+    diag = jnp.diagonal(w)
+    off = (w - jnp.diag(diag)) * decay[None, :]  # axis 1 indexes the sender
+    axis = 1 if stochasticity == "row" else 0
+    new_diag = 1.0 - jnp.sum(off, axis=axis)
+    beta_d = consts.beta * decay[None, :]
+    row_sums = jnp.sum(beta_d, axis=1, keepdims=True)
+    beta = jnp.where(row_sums > 0, beta_d / jnp.where(row_sums > 0, row_sums, 1.0), 0.0)
+    return ProtocolConstants(w=off + jnp.diag(new_diag), beta=beta)
+
+
 class PushSumState(NamedTuple):
     """Per-peer push-sum mass y_k; sum_k y_k == K is conserved every round."""
 
@@ -192,6 +242,47 @@ class ConsensusProtocol:
         """
         raise NotImplementedError
 
+    def mix_split_sharded_begin(
+        self,
+        proto_state: PyTree,
+        w_mat: jax.Array,
+        *,
+        axis_name: str,
+        lanes,
+    ) -> tuple[PyTree, Any]:
+        """Per-consensus-step setup of the sharded CONVEX-SPLIT mix.
+
+        The sharded counterpart of ``mix_compressed``'s diagonal/off-diagonal
+        split, used by bounded-staleness consensus
+        (``p2p._consensus_phase_sharded_async``): the self term runs on this
+        peer's TRUE (1, ...) block, the off-diagonal accumulation on a
+        substitute (K, ...) stack (stale snapshots there; estimates would
+        work the same way).  Implementations must mirror ``mix_compressed``
+        operation for operation — this peer's row of the same off-diagonal
+        einsum, the same elementwise self term, the same add order — so the
+        pod async runtime stays fp32 bit-identical to the vmap async runtime
+        (the ``mix``/``mix_sharded_leaf`` parity contract, restated for the
+        split form).  Returns (new proto_state, ctx for
+        ``mix_split_sharded_leaf``).
+        """
+        raise NotImplementedError(
+            f"protocol {self.name!r} does not implement the sharded split mix"
+        )
+
+    def mix_split_sharded_leaf(
+        self, ctx, x_block: jax.Array, sub_full: jax.Array
+    ) -> jax.Array:
+        """One leaf of the sharded convex-split mix.
+
+        ``x_block`` is this peer's true (1, ...) slice; ``sub_full`` the
+        (K, ...) substitute stack gathered over the schedule's lanes (zero
+        rows for non-in-neighbors — they meet zero off-diagonal weights, so
+        they contribute exactly +-0.0 like the dense form's absent edges).
+        The own row of ``sub_full`` is never read: its weight lives on the
+        diagonal, which multiplies ``x_block``.
+        """
+        raise NotImplementedError
+
     def mix_hier_begin(
         self,
         proto_state: PyTree,
@@ -272,6 +363,7 @@ class GossipProtocol(ConsensusProtocol):
     name = "gossip"
 
     def init_state(self, params: PyTree, data_sizes: Sequence[int] | None = None) -> PyTree:
+        """Gossip carries no protocol state: always ``()``."""
         return ()
 
     def constants(
@@ -282,6 +374,7 @@ class GossipProtocol(ConsensusProtocol):
         data_sizes: Sequence[int] | None = None,
         consensus_step_size: float | np.ndarray = 1.0,
     ) -> ProtocolConstants:
+        """Row-stochastic (R, K, K) W/Beta stacks for the schedule."""
         w, beta = graph_lib.schedule_matrices(
             schedule, mixing, data_sizes=data_sizes,
             consensus_step_size=consensus_step_size,
@@ -291,6 +384,7 @@ class GossipProtocol(ConsensusProtocol):
     def mix(
         self, proto_state: PyTree, params: PyTree, consts: ProtocolConstants
     ) -> tuple[PyTree, PyTree]:
+        """One stacked mix step: ``W x`` per leaf (Eq. 4's averaging)."""
         return proto_state, consensus_lib.mix_stacked(consts.w, params)
 
     def mix_compressed(
@@ -332,14 +426,45 @@ class GossipProtocol(ConsensusProtocol):
         axis_name: str,
         lanes,
     ) -> tuple[PyTree, Any]:
-        # this peer's (1, K) row of the stacked path's mixing matrix
+        """Per-round pod setup: this peer's (1, K) row of the mixing matrix."""
         my = jax.lax.axis_index(axis_name)
         w_row = jnp.take(w_mat, my, axis=0)[None]
         return proto_state, w_row
 
     def mix_sharded_leaf(self, ctx, x_block: jax.Array, x_full: jax.Array) -> jax.Array:
-        # this peer's (1, K) x (K, ...) row of the stacked path's einsum
+        """This peer's (1, K) x (K, ...) row of the stacked path's einsum."""
         return consensus_lib.mix_leaf(ctx, x_full)
+
+    def mix_split_sharded_begin(
+        self,
+        proto_state: PyTree,
+        w_mat: jax.Array,
+        *,
+        axis_name: str,
+        lanes,
+    ) -> tuple[PyTree, Any]:
+        """Pod setup for the convex split mix: (off-diag row, own diagonal)."""
+        my = jax.lax.axis_index(axis_name)
+        w = w_mat.astype(jnp.float32)
+        diag = jnp.diagonal(w)  # (K,)
+        w_off = w - jnp.diag(diag)
+        off_row = jnp.take(w_off, my, axis=0)[None]  # (1, K)
+        diag_mine = jnp.take(diag, my)[None]  # (1,)
+        return proto_state, (off_row, diag_mine)
+
+    def mix_split_sharded_leaf(
+        self, ctx, x_block: jax.Array, sub_full: jax.Array
+    ) -> jax.Array:
+        """``mix_compressed``'s leaf, operation for operation, on this row.
+
+        ``own = diag * x_block`` (elementwise) plus the off-diagonal einsum's
+        row over the substitute stack — bitwise the stacked path's row.
+        """
+        off_row, diag_mine = ctx
+        feat = (1,) * (x_block.ndim - 1)
+        own = diag_mine.reshape((-1,) + feat) * x_block.astype(jnp.float32)
+        nbr = consensus_lib.mix_leaf(off_row, sub_full)
+        return (own + nbr).astype(x_block.dtype)
 
     def mix_hier_begin(
         self,
@@ -353,11 +478,13 @@ class GossipProtocol(ConsensusProtocol):
         block_size: int | None = None,
         ops_block: "SparseRoundOps | None" = None,
     ) -> tuple[PyTree, Any]:
+        """Hierarchical-runtime setup: bridge (dense W) or segment weights."""
         if mode == "bridge":
             return proto_state, ("bridge", (dense_w, row0, block_size))
         return proto_state, ("segment", (ops_block.self_w, ops_block.nbr_w))
 
     def mix_hier_leaf(self, ctx, x_block: jax.Array, x_view: jax.Array) -> jax.Array:
+        """Hierarchical mix per leaf: full-einsum-then-slice or slot sum."""
         tag, payload = ctx
         if tag == "bridge":
             # the stacked runtime's FULL (K, K) x (K, ...) einsum, then this
@@ -379,6 +506,7 @@ class PushSumProtocol(ConsensusProtocol):
     def init_state(
         self, params: PyTree, data_sizes: Sequence[int] | None = None
     ) -> PushSumState:
+        """Initial (K,) mass: data-size-proportional, normalized to sum K."""
         k = jax.tree.leaves(params)[0].shape[0]
         if data_sizes is None:
             mass = np.ones(k)
@@ -399,6 +527,7 @@ class PushSumProtocol(ConsensusProtocol):
         data_sizes: Sequence[int] | None = None,
         consensus_step_size: float | np.ndarray = 1.0,
     ) -> ProtocolConstants:
+        """Column-stochastic (R, K, K) A/Beta stacks for the schedule."""
         w, beta = graph_lib.schedule_matrices(
             schedule, mixing, data_sizes=data_sizes,
             consensus_step_size=consensus_step_size, stochasticity="column",
@@ -408,6 +537,7 @@ class PushSumProtocol(ConsensusProtocol):
     def mix(
         self, proto_state: PushSumState, params: PyTree, consts: ProtocolConstants
     ) -> tuple[PushSumState, PyTree]:
+        """One push-sum step: mass-biased averaging de-biased by ``y_new``."""
         a = consts.w.astype(jnp.float32)
         y = proto_state.mass.astype(jnp.float32)  # (K,)
         y_new = jnp.einsum("kj,j->k", a, y, precision=jax.lax.Precision.HIGHEST)
@@ -501,6 +631,55 @@ class PushSumProtocol(ConsensusProtocol):
         out = num / y_new.reshape((-1,) + (1,) * (x_full.ndim - 1))
         return out.astype(x_block.dtype)
 
+    def mix_split_sharded_begin(
+        self,
+        proto_state: PushSumState,
+        w_mat: jax.Array,
+        *,
+        axis_name: str,
+        lanes,
+    ) -> tuple[PushSumState, Any]:
+        """Sharded split mix, scalar part: ``mix_compressed``'s mass update.
+
+        The (K,) mass rides the schedule's lanes and the FULL (K, K) x (K,)
+        matvec keeps one row — exactly ``mix_sharded_begin`` (the mass is
+        never substituted) — plus this peer's slice of the numerator's
+        diagonal/off-diagonal decomposition.
+        """
+        k = w_mat.shape[-1]
+        my = jax.lax.axis_index(axis_name)
+        a = w_mat.astype(jnp.float32)  # (K, K)
+        diag = jnp.diagonal(a)  # (K,)
+        a_off = a - jnp.diag(diag)
+        off_row = jnp.take(a_off, my, axis=0)[None]  # (1, K)
+        diag_mine = jnp.take(diag, my)[None]  # (1,)
+        y = proto_state.mass.astype(jnp.float32)  # (1,)
+        y_full = consensus_lib.gather_peer_rows(y, axis_name, lanes, k)  # (K,)
+        y_new_all = jnp.einsum("kj,j->k", a, y_full, precision=jax.lax.Precision.HIGHEST)
+        y_new = jnp.take(y_new_all, my)[None]  # (1,)
+        return PushSumState(mass=y_new), (off_row, diag_mine, y, y_full, y_new)
+
+    def mix_split_sharded_leaf(
+        self, ctx, x_block: jax.Array, sub_full: jax.Array
+    ) -> jax.Array:
+        """Sharded split mix, one leaf: ``mix_compressed``'s numerator row.
+
+        Self term on the true biased block, off-diagonal einsum row on the
+        sender-mass-biased substitute stack, divided by the row's new mass —
+        operation for operation the vmap expression, for fp32 bit-parity.
+        """
+        off_row, diag_mine, y, y_full, y_new = ctx
+        feat = (1,) * (x_block.ndim - 1)
+        own = diag_mine.reshape((-1,) + feat) * (
+            x_block.astype(jnp.float32) * y.reshape((-1,) + feat)
+        )
+        biased = sub_full.astype(jnp.float32) * y_full.reshape((-1,) + feat)
+        nbr = jnp.einsum(
+            "kj,j...->k...", off_row, biased, precision=jax.lax.Precision.HIGHEST
+        )
+        out = (own + nbr) / y_new.reshape((-1,) + feat)
+        return out.astype(x_block.dtype)
+
     def mix_hier_begin(
         self,
         proto_state: PushSumState,
@@ -513,6 +692,7 @@ class PushSumProtocol(ConsensusProtocol):
         block_size: int | None = None,
         ops_block: "SparseRoundOps | None" = None,
     ) -> tuple[PushSumState, Any]:
+        """Hierarchical setup: advance the mass lane (bridge or segment)."""
         y = proto_state.mass.astype(jnp.float32)  # (p,) this device's masses
         if mode == "bridge":
             # Replay ``mix``'s FULL (K, K) x (K,) mass matvec on the gathered
@@ -546,6 +726,7 @@ class PushSumProtocol(ConsensusProtocol):
         return PushSumState(mass=y_new), ("segment", (self_w_y, nbr_w_y, y_new))
 
     def mix_hier_leaf(self, ctx, x_block: jax.Array, x_view: jax.Array) -> jax.Array:
+        """Hierarchical push-sum leaf: numerator mix divided by new mass."""
         tag, payload = ctx
         feat = (1,) * (x_block.ndim - 1)
         if tag == "bridge":
@@ -589,6 +770,7 @@ def register_protocol(protocol: ConsensusProtocol) -> ConsensusProtocol:
 
 
 def get_protocol(name: str) -> ConsensusProtocol:
+    """Look up a registered protocol by name (ValueError on unknown)."""
     try:
         return _REGISTRY[name]
     except KeyError:
@@ -598,6 +780,7 @@ def get_protocol(name: str) -> ConsensusProtocol:
 
 
 def protocol_names() -> tuple[str, ...]:
+    """Registered protocol names, in registration order."""
     return tuple(_REGISTRY)
 
 

@@ -32,6 +32,7 @@ from repro.configs.p2pl_mnist import (
     iid_k100,
     noniid_k2,
     sharded_k8,
+    straggler_k8,
     timevarying_k2,
     timevarying_k8,
 )
@@ -300,7 +301,7 @@ def main(argv=None):
                     choices=["iid_k100", "noniid_local_dsgd", "noniid_affinity",
                              "noniid_dsgd", "p2p_lm",
                              "timevarying_k2", "timevarying_k8", "directed_k8",
-                             "sharded_k8"])
+                             "sharded_k8", "straggler_k8"])
     ap.add_argument("--peer-axis", default="vmap", choices=["vmap", "pod"],
                     help="how the K peer axis executes: 'vmap' (stacked "
                          "runtime, any device count) or 'pod' (shard_map over "
@@ -383,6 +384,28 @@ def main(argv=None):
                     help="fraction of entries the 'topk' compressor keeps per "
                          "leaf (in (0, 1]; ~50x bytes reduction at 0.01 on "
                          "the paper's 2NN)")
+    ap.add_argument("--steps-profile", default=None,
+                    choices=sorted(p2p.STEPS_PROFILES),
+                    help="per-peer compute profile (core/p2p.py "
+                         "compute_profile): 'uniform' — every peer runs all T "
+                         "local steps (the synchronous legacy path, "
+                         "bit-identical); 'straggler' — the last "
+                         "straggler_frac of peers run T/straggler_period "
+                         "steps and publish every straggler_period-th round; "
+                         "'linear' — per-peer speeds ramp from 1 down to "
+                         "1/straggler_period")
+    ap.add_argument("--staleness-bound", type=int, default=None,
+                    help="bounded-staleness gossip: peers mix each sender's "
+                         "last PUBLISHED snapshot, at most this many rounds "
+                         "old (forced delivery at the bound).  0 (default) = "
+                         "synchronous mixing, bit-identical to the legacy "
+                         "round.  > 0 enables the async consensus path with "
+                         "age-decayed, renormalized mixing weights")
+    ap.add_argument("--staleness-decay", type=float, default=None,
+                    help="per-round decay applied to a stale snapshot's "
+                         "mixing weight (weight *= decay^age, diagonal "
+                         "renormalized per the protocol's stochasticity); "
+                         "in (0, 1], default 0.5")
     ap.add_argument("--algorithm", default="p2pl_affinity",
                     help="algorithm for timevarying_* experiments")
     ap.add_argument("--out", default="")
@@ -448,6 +471,26 @@ def main(argv=None):
             adaptive_eps=args.adaptive_eps,
             adaptive_seed=args.adaptive_seed,
         )
+    elif args.experiment == "straggler_k8":
+        schedule = args.schedule or "static"
+        if schedule not in ("static", "round_robin"):
+            ap.error(f"straggler_k8 supports --schedule static|round_robin, "
+                     f"got {schedule!r}")
+        exp = straggler_k8(
+            schedule,
+            args.protocol or "gossip",
+            args.algorithm,
+            args.local_steps,
+            steps_profile=args.steps_profile or "straggler",
+            staleness_bound=(3 if args.staleness_bound is None
+                             else args.staleness_bound),
+            staleness_decay=(0.5 if args.staleness_decay is None
+                             else args.staleness_decay),
+            schedule_rounds=args.schedule_rounds,
+            round_robin_topologies=tuple(
+                t for t in args.round_robin_topologies.split(",") if t
+            ),
+        )
     elif args.experiment == "iid_k100":
         exp = iid_k100(args.topology)
     elif args.experiment == "noniid_local_dsgd":
@@ -462,11 +505,36 @@ def main(argv=None):
         )
     if args.compressor and (exp.p2p.compressor != args.compressor
                             or exp.p2p.topk_frac != args.topk_frac):
-        exp = dataclasses.replace(
-            exp, p2p=dataclasses.replace(
-                exp.p2p, compressor=args.compressor, topk_frac=args.topk_frac
+        try:
+            exp = dataclasses.replace(
+                exp, p2p=dataclasses.replace(
+                    exp.p2p, compressor=args.compressor, topk_frac=args.topk_frac
+                )
             )
-        )
+        except ValueError as e:
+            # e.g. straggler_k8's staleness_bound=3 x --compressor topk
+            ap.error(str(e))
+    async_overrides = {
+        k: v for k, v in (
+            ("steps_profile", args.steps_profile),
+            ("staleness_bound", args.staleness_bound),
+            ("staleness_decay", args.staleness_decay),
+        ) if v is not None and getattr(exp.p2p, k) != v
+    }
+    if async_overrides:
+        try:
+            exp = dataclasses.replace(
+                exp, p2p=dataclasses.replace(exp.p2p, **async_overrides)
+            )
+        except ValueError as e:
+            # P2PConfig.__post_init__ rejects staleness x adaptive/compressed
+            # with the actionable message — surface it as a CLI error
+            ap.error(str(e))
+    if exp.p2p.use_async and args.peers_per_device > 1:
+        ap.error("--staleness-bound > 0 / a non-uniform --steps-profile is "
+                 "not supported with --peers-per-device > 1: the hierarchical "
+                 "bridge/segment mixes stream live fp32 blocks, not staleness "
+                 "snapshots. Run async rounds with one peer per device.")
     if args.peers_per_device < 1:
         ap.error(f"--peers-per-device must be >= 1, got {args.peers_per_device}")
     if args.peers_per_device > 1 and args.peer_axis != "pod":

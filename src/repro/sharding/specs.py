@@ -206,6 +206,13 @@ def peer_stacked_pspecs(tree: PyTree, *, peer_axis="pod") -> PyTree:
     every device needs every sender's running estimate, and all replicas
     advance identically from the broadcast payloads, so the stack is a true
     replica, not a shard.
+
+    The ``staleness`` subtree (bounded-staleness snapshot buffer,
+    ``repro.core.p2p.StalenessState``) takes the DEFAULT rule: its
+    ``published`` leaves are params-shaped (K, ...) and its ``age`` is (K,),
+    both peer-sharded — each device owns its peer's published snapshot and
+    age, and the async pod round gathers the snapshot stack over the lanes
+    once per round, exactly like params.
     """
 
     def one(leaf):

@@ -1,0 +1,68 @@
+"""Dead-link check for the markdown documentation surface.
+
+Scans ``[text](target)`` markdown links in the given files and fails if any
+*relative* target does not exist on disk (resolved against the linking
+file's directory, ``#fragment`` stripped).  External links (``http(s)://``,
+``mailto:``) and pure in-page anchors (``#...``) are ignored — CI must not
+flake on network reachability.
+
+    python tools/check_links.py README.md docs/ARCHITECTURE.md benchmarks/README.md
+
+Exit status 0 iff every relative link resolves; broken links are listed as
+``file:line: target``.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# inline links only; reference-style ([text][ref]) is not used in this repo.
+# The target group stops at the first ')' — none of our paths contain one.
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def broken_links(md_path: Path) -> list[tuple[int, str]]:
+    """Return (line_number, target) for every unresolvable relative link."""
+    out = []
+    in_fence = False
+    for lineno, line in enumerate(md_path.read_text().splitlines(), start=1):
+        # links inside fenced code blocks are example text, not navigation
+        if line.lstrip().startswith("```"):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for target in _LINK.findall(line):
+            if target.startswith(_EXTERNAL) or target.startswith("#"):
+                continue
+            rel = target.split("#", 1)[0]
+            if rel and not (md_path.parent / rel).exists():
+                out.append((lineno, target))
+    return out
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print("usage: python tools/check_links.py FILE.md [FILE.md ...]", file=sys.stderr)
+        return 2
+    failures = 0
+    for name in argv:
+        path = Path(name)
+        if not path.exists():
+            print(f"{name}: file itself does not exist", file=sys.stderr)
+            failures += 1
+            continue
+        for lineno, target in broken_links(path):
+            print(f"{name}:{lineno}: broken link -> {target}", file=sys.stderr)
+            failures += 1
+    if failures:
+        print(f"{failures} broken link(s)", file=sys.stderr)
+        return 1
+    print(f"OK: all relative links in {len(argv)} file(s) resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
