@@ -4,11 +4,13 @@ and serializes the consensus-protocol rows to ``BENCH_protocols.json``, the
 round-loop driver rows to ``BENCH_roundloop.json``, the adaptive
 partner-selection rows to ``BENCH_adaptive.json``, the K-scaling rows to
 ``BENCH_scaling.json``, the compression Pareto rows to
-``BENCH_compression.json``, and the sync-vs-async straggler rows to
-``BENCH_straggler.json`` so the perf trajectories (spectral gap, consensus
+``BENCH_compression.json``, the sync-vs-async straggler rows to
+``BENCH_straggler.json``, and the stacked-fleet serving rows to
+``BENCH_serving.json`` so the perf trajectories (spectral gap, consensus
 error, wall-clock per round, scan-vs-python speedup, oscillation damping,
 sub-quadratic K-scaling, bytes-vs-accuracy compression, async
-wall-clock-to-accuracy) accumulate across PRs.  See benchmarks/README.md for the
+wall-clock-to-accuracy, stacked-vs-sequential serving throughput and the
+personalized-vs-consensus accuracy A/B) accumulate across PRs.  See benchmarks/README.md for the
 file contract.  ``--only`` with an unknown name errors out listing the
 registry (a typo used to silently run nothing).
 
@@ -56,6 +58,9 @@ def main(argv=None) -> None:
     ap.add_argument("--straggler-json-out", default="BENCH_straggler.json",
                     help="where to write the sync-vs-async straggler "
                          "benchmark rows ('' disables)")
+    ap.add_argument("--serving-json-out", default="BENCH_serving.json",
+                    help="where to write the stacked-fleet serving "
+                         "benchmark rows ('' disables)")
     args = ap.parse_args(argv)
 
     from benchmarks.adaptive import ALL_ADAPTIVE
@@ -65,11 +70,13 @@ def main(argv=None) -> None:
     from benchmarks.protocols import ALL_COMPRESSION, ALL_PROTOCOLS
     from benchmarks.roundloop import ALL_ROUNDLOOP, ALL_SCALING
     from benchmarks.schedules import ALL_SCHEDULES
+    from benchmarks.serving import ALL_SERVING
     from benchmarks.straggler import ALL_STRAGGLER
 
     benches = {**ALL_KERNELS, **ALL_FIGURES, **ALL_SCHEDULES, **ALL_PROTOCOLS,
                **ALL_PEER_AXIS, **ALL_ROUNDLOOP, **ALL_ADAPTIVE,
-               **ALL_SCALING, **ALL_COMPRESSION, **ALL_STRAGGLER}
+               **ALL_SCALING, **ALL_COMPRESSION, **ALL_STRAGGLER,
+               **ALL_SERVING}
     only = set(args.only.split(",")) if args.only else None
     if only:
         # a typo'd --only used to silently run NOTHING (and exit 0) — fail
@@ -87,6 +94,7 @@ def main(argv=None) -> None:
     scaling_rows = []
     compression_rows = []
     straggler_rows = []
+    serving_rows = []
     print("name,us_per_call,derived")
     for name, fn in benches.items():
         if only and name not in only:
@@ -111,6 +119,8 @@ def main(argv=None) -> None:
                 compression_rows += rows
             if name in ALL_STRAGGLER:
                 straggler_rows += rows
+            if name in ALL_SERVING:
+                serving_rows += rows
         except Exception:  # noqa: BLE001
             failures += 1
             print(f"{name},ERROR,0", flush=True)
@@ -141,6 +151,15 @@ def main(argv=None) -> None:
         _write_rows(args.compression_json_out, compression_rows, "compression")
     if args.straggler_json_out:
         _write_rows(args.straggler_json_out, straggler_rows, "straggler")
+    if args.serving_json_out:
+        if any("SKIPPED" in row["name"] for row in serving_rows):
+            # a <8-device run has no pod rows: writing it would clobber a
+            # committed baseline with a file the CI gate can never match
+            print(f"NOT writing {args.serving_json_out}: pod rows were "
+                  "SKIPPED (need 8 devices — set XLA_FLAGS="
+                  "--xla_force_host_platform_device_count=8)", file=sys.stderr)
+        else:
+            _write_rows(args.serving_json_out, serving_rows, "serving")
     if failures:
         sys.exit(1)
 

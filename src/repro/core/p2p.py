@@ -1784,6 +1784,50 @@ def make_scan_driver(
 
 
 # ---------------------------------------------------------------------------
+# Serving extraction (the trained fleet's artifacts)
+# ---------------------------------------------------------------------------
+
+
+def serving_params(state: P2PState) -> PyTree:
+    """Extract the personalized serving artifact from a trained state.
+
+    The stacked (K, ...) per-peer parameter tree, detached from the
+    optimizer/consensus leaves — P2PL's product is K *divergent* models, and
+    this is the exact layout the stacked serving runtime consumes
+    (``repro.launch.serve.make_fleet_generate_fn`` /
+    ``make_fleet_classify_fn``): the same leading-K axis, so
+    ``sharding.specs.peer_stacked_pspecs`` places training state and serving
+    fleet identically.
+    """
+    return state.params
+
+
+def consensus_averaged_params(
+    stacked_params: PyTree, data_sizes: np.ndarray | None = None
+) -> PyTree:
+    """The ONE-model serving baseline: average the K peer rows, broadcast back.
+
+    Collapses the stacked tree to its (data-weighted, else uniform) fp32
+    average and re-broadcasts it to all K rows, so the averaged baseline
+    routes through the IDENTICAL stacked serving path as the personalized
+    fleet — the per-peer accuracy A/B (what personalization buys) differs
+    only in the parameter rows, never in the serving code.
+    """
+    k = jax.tree.leaves(stacked_params)[0].shape[0]
+    if data_sizes is None:
+        w = jnp.full((k,), 1.0 / k, jnp.float32)
+    else:
+        sizes = jnp.asarray(data_sizes, jnp.float32)
+        w = sizes / jnp.sum(sizes)
+
+    def avg(p):
+        mean = jnp.tensordot(w, p.astype(jnp.float32), axes=1)
+        return jnp.broadcast_to(mean.astype(p.dtype), p.shape)
+
+    return jax.tree.map(avg, stacked_params)
+
+
+# ---------------------------------------------------------------------------
 # Evaluation helpers (stratified accuracy — the paper's seen/unseen split)
 # ---------------------------------------------------------------------------
 

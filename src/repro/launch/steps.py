@@ -158,3 +158,74 @@ def make_serve_step(model: Model) -> Callable:
 def make_multipod_serve_step(model: Model) -> Callable:
     step = make_serve_step(model)
     return jax.vmap(step, in_axes=(0, 0, 0, 0), spmd_axis_name="pod")
+
+
+def prompt_dec_len(batch: PyTree) -> int:
+    """Decoder-side length of a prompt batch: the position decode resumes at.
+
+    vlm prefix embeddings (``patches``) occupy decoder cache slots ahead of
+    the text tokens, so they advance the decode position; encoder inputs
+    (encdec ``frames``) live in a separate cross-attention cache and do NOT.
+    """
+    n = batch["tokens"].shape[1]
+    if "patches" in batch:
+        n += batch["patches"].shape[1]
+    return n
+
+
+def make_decode_scan(model: Model, num_steps: int) -> Callable:
+    """(params, cache, token, pos) -> (tokens (B, num_steps), cache).
+
+    The per-token python decode loop collapsed into ONE ``lax.scan`` over
+    generation steps — one dispatch and one compile for the whole generation
+    instead of one per token (the same scan pattern that fused the round
+    loop in ``core/p2p.py:make_scan_driver``).  ``num_steps`` is static: one
+    compile per generation length.  ``num_steps == 0`` is rejected — callers
+    take the empty-decode path structurally (see ``make_generate_fn``).
+    """
+    if num_steps < 1:
+        raise ValueError(
+            f"make_decode_scan needs num_steps >= 1, got {num_steps}; a "
+            "zero-step decode is the explicit empty-decode case — skip the "
+            "scan entirely (make_generate_fn does this structurally)"
+        )
+    step = make_serve_step(model)
+
+    def decode_scan(params, cache, token, pos):
+        def body(carry, _):
+            tok, p, c = carry
+            tok, p, c = step(params, c, tok, p)
+            return (tok, p, c), tok
+
+        (_, _, cache), toks = jax.lax.scan(
+            body, (token, pos, cache), None, length=num_steps
+        )
+        return jnp.moveaxis(toks, 0, 1), cache  # (steps, B) -> (B, steps)
+
+    return decode_scan
+
+
+def make_generate_fn(model: Model, gen_tokens: int) -> Callable:
+    """(params, batch, cache) -> (tokens (B, gen_tokens), cache).
+
+    Prefill + scanned greedy decode as one traceable function: the prefill
+    argmax is the first generated token, the remaining ``gen_tokens - 1``
+    come from ``make_decode_scan``.  ``gen_tokens == 1`` skips the scan
+    STRUCTURALLY (prefill only — the explicit empty decode).  Returning the
+    final cache lets callers jit with ``donate_argnums`` on the cache slot:
+    the input buffers are reused in place for the output cache.
+    """
+    if gen_tokens < 1:
+        raise ValueError(f"need gen_tokens >= 1, got {gen_tokens}")
+    prefill = make_prefill_step(model)
+    decode = make_decode_scan(model, gen_tokens - 1) if gen_tokens > 1 else None
+
+    def generate(params, batch, cache):
+        tok, cache = prefill(params, batch, cache)
+        if decode is None:
+            return tok[:, None], cache
+        pos = jnp.full(tok.shape, prompt_dec_len(batch), jnp.int32)
+        toks, cache = decode(params, cache, tok, pos)
+        return jnp.concatenate([tok[:, None], toks], axis=1), cache
+
+    return generate

@@ -66,6 +66,7 @@ def run_paper_experiment(
     driver: str = "scan",
     peers_per_device: int = 1,
     mix_mode: str = "auto",
+    return_state: bool = False,
 ) -> metrics_lib.RoundLog:
     """``peer_axis``: "vmap" (stacked runtime, any device count) or "pod" (the
     sharded runtime: one device per peer, bit-identical results — see
@@ -85,6 +86,13 @@ def run_paper_experiment(
     (``core.graph.SparseSchedule``).  ``mix_mode`` picks its consensus form:
     "bridge" (fp32 bit-identical, K <= 64), "segment" (O(K * degree / devices)
     memory, allclose), "auto" (bridge iff it is the parity regime).
+
+    ``return_state=True`` returns ``(log, state)`` — the final post-consensus
+    ``P2PState``, the training->serving bridge: ``p2p.serving_params(state)``
+    is the stacked (K, ...) fleet the serving runtime
+    (``repro.launch.serve``) consumes directly.  Under the pod runtime the
+    state stays peer-sharded; pull it with ``jax.device_get`` before serving
+    on the default device.
     """
     rounds = rounds or exp.rounds
     if peer_axis not in ("vmap", "pod"):
@@ -226,6 +234,8 @@ def run_paper_experiment(
             if (r + 1) % eval_every == 0 or r == rounds - 1:
                 # eval at period ends only: non-eval rounds transfer NOTHING
                 record_eval(r, after_local, after_cons, losses)
+    if return_state:
+        return log, state
     return log
 
 

@@ -201,6 +201,13 @@ def peer_stacked_pspecs(tree: PyTree, *, peer_axis="pod") -> PyTree:
     replicated scalar.  Works on arrays, ShapeDtypeStructs, and tracers —
     ``make_sharded_round_fn`` builds its shard_map in/out specs with it.
 
+    The serving runtime is the second consumer of this layout: a trained
+    ``P2PState.params`` stack (``core/p2p.py:serving_params``) is served
+    as-is — ``launch/serve.py`` routes request groups over the same leading
+    K axis, and ``serve_fleet(peer_axis="pod")`` places parameters, request
+    batches, and decode caches with ``shard_peer_tree`` exactly as the
+    trainer does, so training and serving share one placement.
+
     One exception: a ``compression`` subtree (the CHOCO public-estimate stack
     of the compressed-gossip runtime) is REPLICATED, leading axis included —
     every device needs every sender's running estimate, and all replicas

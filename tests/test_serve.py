@@ -1,0 +1,328 @@
+"""Serving-path contract: scanned decode, fleet routing, cache semantics.
+
+The stacked K-model serving runtime (``launch/serve.py`` + the generate
+builders in ``launch/steps.py``) has four load-bearing claims, each pinned
+here at test scale:
+
+* **Parity** — the fused ``lax.scan`` decode produces bit-identical greedy
+  tokens to the legacy per-token python loop, for a text decoder AND a vlm
+  (whose image patches shift the decode start position).
+* **Fleet == sequential** — one stacked vmap call over K models is
+  bit-identical (``np.array_equal``, not allclose) to serving each model
+  separately, for the LLM generate path and the paper's 2NN classifier.
+* **One compile** — ``peer_ids`` routing is traced: re-routing never
+  retraces the jitted fleet; the scanned decode traces its step body once
+  regardless of generation length.
+* **Cache discipline** — generate fills cache position slots exactly
+  0..dec_len+gen-2 (patches included in dec_len), and donated caches are
+  consumed (buffers reused, inputs deleted).
+
+The pod-layout test needs one device per peer and carries the ``mesh``
+marker (same contract as tests/test_mesh_runtime.py).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core import p2p
+from repro.launch import serve as serve_lib
+from repro.launch import steps as steps_lib
+from repro.models import build_model, mlp
+
+ARCHS = ["smollm-135m", "internvl2-2b"]  # text decoder + vlm (prefix patches)
+K = 8
+
+needs_mesh = pytest.mark.skipif(
+    jax.device_count() < K,
+    reason=f"needs >= {K} devices "
+           f"(XLA_FLAGS=--xla_force_host_platform_device_count={K})",
+)
+
+
+@pytest.fixture(scope="module")
+def built():
+    cache = {}
+
+    def get(name):
+        if name not in cache:
+            model = build_model(reduced(get_config(name)))
+            params = model.init(jax.random.PRNGKey(0))
+            cache[name] = (model, params)
+        return cache[name]
+
+    return get
+
+
+# ---------------------------------------------------------------- parity
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_scan_decode_matches_python_loop(arch, built):
+    """Greedy generation under ONE lax.scan == the per-token python loop."""
+    model, params = built(arch)
+    batch_size, prompt_len, gen = 2, 8, 5
+    prompt = model.make_batch(jax.random.PRNGKey(1), batch_size, prompt_len)
+    dec_len = steps_lib.prompt_dec_len(prompt)
+
+    prefill = jax.jit(steps_lib.make_prefill_step(model))
+    serve = jax.jit(steps_lib.make_serve_step(model))
+    tok, cache = prefill(params, prompt, model.init_cache(batch_size, dec_len + gen))
+    pos = jnp.full((batch_size,), dec_len, jnp.int32)
+    toks = [tok]
+    for _ in range(gen - 1):
+        tok, pos, cache = serve(params, cache, tok, pos)
+        toks.append(tok)
+    loop_tokens = np.asarray(jnp.stack(toks, axis=1))
+
+    generate = jax.jit(steps_lib.make_generate_fn(model, gen))
+    scan_tokens, _ = generate(params, prompt, model.init_cache(batch_size, dec_len + gen))
+    assert np.array_equal(np.asarray(scan_tokens), loop_tokens)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_serve_batch_scan_matches_python_impl(arch):
+    """The serve_batch entry point: both decode_impl values, same tokens."""
+    out_scan = serve_lib.serve_batch(arch, batch=2, prompt_len=8, gen_tokens=5,
+                                     decode_impl="scan")
+    out_py = serve_lib.serve_batch(arch, batch=2, prompt_len=8, gen_tokens=5,
+                                   decode_impl="python")
+    assert np.array_equal(np.asarray(out_scan["tokens"]), np.asarray(out_py["tokens"]))
+    assert out_scan["decode_steps"] == out_py["decode_steps"] == 4
+
+
+# ------------------------------------------------- gen_tokens=1 boundary
+
+
+def test_gen_tokens_one_is_explicit_empty_decode():
+    """gen_tokens=1 samples ONLY the prefill token: (B, 1), no decode rate."""
+    out = serve_lib.serve_batch("smollm-135m", batch=2, prompt_len=8, gen_tokens=1)
+    assert out["tokens"].shape == (2, 1)
+    assert out["decode_steps"] == 0
+    assert out["decode_s_per_token"] is None
+    # the single token is the prefill argmax, not a decode-step product
+    many = serve_lib.serve_batch("smollm-135m", batch=2, prompt_len=8, gen_tokens=5)
+    assert np.array_equal(np.asarray(out["tokens"]), np.asarray(many["tokens"][:, :1]))
+
+
+def test_degenerate_lengths_rejected():
+    with pytest.raises(ValueError, match="gen_tokens"):
+        serve_lib.serve_batch("smollm-135m", gen_tokens=0)
+    model = build_model(reduced(get_config("smollm-135m")))
+    with pytest.raises(ValueError, match="gen_tokens"):
+        steps_lib.make_generate_fn(model, 0)
+    with pytest.raises(ValueError, match="num_steps"):
+        steps_lib.make_decode_scan(model, 0)
+    with pytest.raises(ValueError, match="decode_impl"):
+        serve_lib.serve_batch("smollm-135m", decode_impl="loop")
+
+
+# ------------------------------------------------------- cache semantics
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_cache_positions_filled_exactly(arch, built):
+    """Generate fills cache slots 0..dec_len+gen-2; untouched slots stay -1.
+
+    dec_len counts vlm patches (they occupy decoder cache slots before the
+    text tokens), which is exactly what ``prompt_dec_len`` exists to get
+    right — the internvl2 case fails if decode restarts at tokens-only
+    length.
+    """
+    model, params = built(arch)
+    batch_size, prompt_len, gen = 2, 8, 5
+    prompt = model.make_batch(jax.random.PRNGKey(1), batch_size, prompt_len)
+    dec_len = steps_lib.prompt_dec_len(prompt)
+    if arch == "internvl2-2b":
+        assert dec_len > prompt["tokens"].shape[1]  # patches really add slots
+
+    generate = jax.jit(steps_lib.make_generate_fn(model, gen))
+    cache_size = dec_len + gen + 3  # slack: unwritten slots must stay -1
+    _, cache = generate(params, prompt, model.init_cache(batch_size, cache_size))
+    pos_ids = np.asarray(cache["main"]["pos_ids"])  # (layers, B, cache_len)
+    # prefill writes 0..dec_len-1, the gen-1 decode steps write up to
+    # dec_len+gen-2; the prefill-sampled token itself is never cached
+    expect = set(range(dec_len + gen - 1)) | {-1}
+    for layer in range(pos_ids.shape[0]):
+        for row in range(batch_size):
+            assert set(pos_ids[layer, row].tolist()) == expect
+
+
+def test_generate_cache_donation():
+    """jit(generate, donate_argnums=(2,)) consumes the input cache buffers."""
+    model, params = built_single("smollm-135m")
+    prompt = model.make_batch(jax.random.PRNGKey(1), 2, 8)
+    cache = model.init_cache(2, 13)
+    cache = jax.tree.map(jnp.asarray, cache)  # materialize donate-able buffers
+    generate = jax.jit(steps_lib.make_generate_fn(model, 5), donate_argnums=(2,))
+    jax.block_until_ready(generate(params, prompt, cache))
+    assert all(leaf.is_deleted() for leaf in jax.tree.leaves(cache))
+
+
+def built_single(name):
+    model = build_model(reduced(get_config(name)))
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+# ------------------------------------------------------- one-compile rule
+
+
+def test_decode_scan_traces_step_once():
+    """The scanned decode traces its per-token body ONCE, not once per token."""
+    model, _ = built_single("smollm-135m")
+    traces = [0]
+    inner = model.decode_step
+
+    def counting_decode_step(params, token, pos, cache):
+        traces[0] += 1
+        return inner(params, token, pos, cache)
+
+    counted = dataclasses.replace(model, decode_step=counting_decode_step)
+    params = counted.init(jax.random.PRNGKey(0))
+    prompt = counted.make_batch(jax.random.PRNGKey(1), 2, 8)
+    generate = jax.jit(steps_lib.make_generate_fn(counted, 7))
+    jax.block_until_ready(generate(params, prompt, counted.init_cache(2, 15)))
+    # one trace inside lax.scan (jax may re-trace once for lowering); the
+    # python loop would hit this 6 times even under jit
+    assert traces[0] <= 2
+    assert generate._cache_size() == 1
+
+
+def test_fleet_routing_is_traced_one_compile():
+    """Re-routing peer_ids re-uses the ONE compiled fleet executable."""
+    model, _ = built_single("smollm-135m")
+    stacked = jax.vmap(model.init)(jax.random.split(jax.random.PRNGKey(0), 3))
+    prompts = jax.vmap(lambda k: model.make_batch(k, 2, 8))(
+        jax.random.split(jax.random.PRNGKey(1), 2)
+    )
+    fleet = jax.jit(serve_lib.make_fleet_generate_fn(model, 4))
+
+    def caches():
+        return serve_lib.stack_request_caches(model.init_cache(2, 12), 2)
+
+    toks_a, _ = fleet(stacked, prompts, caches(), jnp.array([2, 0], jnp.int32))
+    toks_b, _ = fleet(stacked, prompts, caches(), jnp.array([1, 1], jnp.int32))
+    assert fleet._cache_size() == 1  # routing is data, not structure
+
+    # and the routing is CORRECT: group g decoded under params[peer_ids[g]]
+    single = jax.jit(steps_lib.make_generate_fn(model, 4))
+    for g, k in [(0, 2), (1, 0)]:
+        want, _ = single(
+            jax.tree.map(lambda p, k=k: p[k], stacked),
+            jax.tree.map(lambda p, g=g: p[g], prompts),
+            model.init_cache(2, 12),
+        )
+        assert np.array_equal(np.asarray(toks_a[g]), np.asarray(want))
+    want, _ = single(
+        jax.tree.map(lambda p: p[1], stacked),
+        jax.tree.map(lambda p: p[0], prompts),
+        model.init_cache(2, 12),
+    )
+    assert np.array_equal(np.asarray(toks_b[0]), np.asarray(want))
+
+
+# -------------------------------------------------- fleet == sequential
+
+
+def test_fleet_generate_bit_identical_to_sequential():
+    """One stacked call == K separate serves, token for token (fp32 CPU)."""
+    model, _ = built_single("smollm-135m")
+    k = 3
+    stacked = jax.vmap(model.init)(jax.random.split(jax.random.PRNGKey(0), k))
+    prompts = jax.vmap(lambda r: model.make_batch(r, 2, 8))(
+        jax.random.split(jax.random.PRNGKey(1), k)
+    )
+    fleet = jax.jit(serve_lib.make_fleet_generate_fn(model, 5), donate_argnums=(2,))
+    toks, _ = fleet(
+        stacked, prompts,
+        serve_lib.stack_request_caches(model.init_cache(2, 13), k),
+        jnp.arange(k, dtype=jnp.int32),
+    )
+    single = jax.jit(steps_lib.make_generate_fn(model, 5))
+    for i in range(k):
+        want, _ = single(
+            jax.tree.map(lambda p, i=i: p[i], stacked),
+            jax.tree.map(lambda p, i=i: p[i], prompts),
+            model.init_cache(2, 13),
+        )
+        assert np.array_equal(np.asarray(toks[i]), np.asarray(want))
+
+
+def test_fleet_classify_bit_identical_to_sequential():
+    """The 2NN classifier fleet (the paper's model): stacked == per-peer."""
+    k, n = 4, 16
+    stacked = jax.vmap(lambda r: mlp.init_2nn(r))(
+        jax.random.split(jax.random.PRNGKey(0), k)
+    )
+    inputs = jax.random.normal(jax.random.PRNGKey(1), (k, n, 784))
+    classify = jax.jit(serve_lib.make_fleet_classify_fn(mlp.apply_2nn))
+    logits = classify(stacked, inputs, jnp.arange(k, dtype=jnp.int32))
+    for i in range(k):
+        want = mlp.apply_2nn(jax.tree.map(lambda p, i=i: p[i], stacked), inputs[i])
+        assert np.array_equal(np.asarray(logits[i]), np.asarray(want))
+    # permuted routing: every group classified under the REVERSED peer's model
+    rev = classify(stacked, inputs, jnp.arange(k - 1, -1, -1, dtype=jnp.int32))
+    for i in range(k):
+        want = mlp.apply_2nn(
+            jax.tree.map(lambda p, i=i: p[k - 1 - i], stacked), inputs[i]
+        )
+        assert np.array_equal(np.asarray(rev[i]), np.asarray(want))
+    assert classify._cache_size() == 1
+
+
+# ------------------------------------------- consensus-averaged baseline
+
+
+def test_consensus_averaged_params_layout_and_values():
+    """Averaged baseline: every peer row == the (weighted) fleet mean."""
+    k = 4
+    stacked = jax.vmap(lambda r: mlp.init_2nn(r, in_dim=6, hidden=5))(
+        jax.random.split(jax.random.PRNGKey(0), k)
+    )
+    avg = p2p.consensus_averaged_params(stacked)
+    for leaf, src in zip(jax.tree.leaves(avg), jax.tree.leaves(stacked)):
+        assert leaf.shape == src.shape  # same stacked layout: serving reuses it
+        want = np.mean(np.asarray(src), axis=0)
+        for row in np.asarray(leaf):
+            np.testing.assert_allclose(row, want, rtol=1e-5, atol=1e-7)
+    sizes = np.array([1.0, 3.0, 0.0, 0.0])
+    weighted = p2p.consensus_averaged_params(stacked, data_sizes=sizes)
+    for leaf, src in zip(jax.tree.leaves(weighted), jax.tree.leaves(stacked)):
+        want = 0.25 * np.asarray(src)[0] + 0.75 * np.asarray(src)[1]
+        np.testing.assert_allclose(np.asarray(leaf)[2], want, rtol=1e-5, atol=1e-7)
+
+
+# ------------------------------------------------------------ pod layout
+
+
+@needs_mesh
+@pytest.mark.mesh
+def test_fleet_pod_layout_matches_vmap():
+    """The SAME jitted fleet over mesh-sharded rows: bit-identical tokens."""
+    from repro.launch import mesh as mesh_lib
+    from repro.sharding import specs as specs_lib
+
+    model, _ = built_single("smollm-135m")
+    stacked = jax.vmap(model.init)(jax.random.split(jax.random.PRNGKey(0), K))
+    prompts = jax.vmap(lambda r: model.make_batch(r, 2, 8))(
+        jax.random.split(jax.random.PRNGKey(1), K)
+    )
+    ids = jnp.arange(K, dtype=jnp.int32)
+    fleet = jax.jit(serve_lib.make_fleet_generate_fn(model, 4), donate_argnums=(2,))
+
+    def caches():
+        return serve_lib.stack_request_caches(model.init_cache(2, 12), K)
+
+    ref, _ = fleet(stacked, prompts, caches(), ids)
+
+    mesh = mesh_lib.make_peer_mesh(K)
+    pod, _ = fleet(
+        specs_lib.shard_peer_tree(stacked, mesh),
+        specs_lib.shard_peer_tree(prompts, mesh),
+        specs_lib.shard_peer_tree(caches(), mesh),
+        specs_lib.shard_peer_tree(ids, mesh),
+    )
+    assert np.array_equal(np.asarray(ref), np.asarray(pod))
