@@ -56,7 +56,8 @@ def adaptive(full=False):
     out = []
     osc = {}
     for name, schedule, rule in VARIANTS:
-        exp = timevarying_k8(schedule, "p2pl_affinity", 10, partner_rule=rule)
+        exp = timevarying_k8(schedule=schedule, algorithm="p2pl_affinity",
+                             local_steps=10, partner_rule=rule)
         t0 = time.time()
         log = run_paper_experiment(exp, rounds=rounds, data=data)
         us = (time.time() - t0) / rounds * 1e6

@@ -45,7 +45,7 @@ def _dev0_osc(log, group):
 
 def fig2_iid_convergence(full=False, topology="ring"):
     """Fig. 2: K=100 IID P2PL — accuracy after both phases; rounds to 90%."""
-    exp = iid_k100(topology)
+    exp = iid_k100(topology=topology)
     if not full:
         exp = dataclasses.replace(
             exp,
@@ -68,7 +68,8 @@ def fig2_iid_convergence(full=False, topology="ring"):
 def fig3_noniid_oscillation(full=False):
     """Fig. 3cd: K=2 pathological non-IID — forgetting + consensus recovery."""
     rounds = 60 if full else 12
-    log, spr = _timed(noniid_k2("local_dsgd", 10), rounds, _data(full))
+    log, spr = _timed(noniid_k2(algorithm="local_dsgd", local_steps=10),
+                      rounds, _data(full))
     unseen_osc = _dev0_osc(log, "peer1_seen")  # device A's unseen classes
     seen_osc = _dev0_osc(log, "peer0_seen")
     worst = float(
@@ -91,7 +92,7 @@ def fig4_local_steps(full=False):
         # equal GRADIENT ITERATIONS across T (the paper's x-axis), so DSGD
         # runs rounds*10 single-step rounds
         r = rounds * (10 // t)
-        log, spr = _timed(noniid_k2(algo, t), r, _data(full))
+        log, spr = _timed(noniid_k2(algorithm=algo, local_steps=t), r, _data(full))
         out.append((f"fig4_T{t}_unseen_oscillation", spr, _dev0_osc(log, "peer1_seen")))
         out.append((f"fig4_T{t}_final_all_acc", spr, log.final_accuracy("all")))
     return out
@@ -105,7 +106,7 @@ def fig5_task_complexity(full=False):
         ("4class", (0, 1), (7, 8)),
         ("10class", (0, 1, 2, 3, 4), (5, 6, 7, 8, 9)),
     ):
-        exp = noniid_k2("local_dsgd", 10)
+        exp = noniid_k2(algorithm="local_dsgd", local_steps=10)
         exp = dataclasses.replace(
             exp, peer_classes=(classes_a, classes_b), samples_per_class=None if full else 100
         )
@@ -128,7 +129,7 @@ def fig6_affinity_damping(full=False):
     out = []
     logs = {}
     for algo, t in (("local_dsgd", 10), ("p2pl_affinity", 10), ("dsgd", 1), ("isolated", 10)):
-        exp = noniid_k2(algo, t)
+        exp = noniid_k2(algorithm=algo, local_steps=t)
         exp = dataclasses.replace(
             exp,
             peer_classes=((0, 1, 2, 3, 4), (5, 6, 7, 8, 9)),

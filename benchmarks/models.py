@@ -1,0 +1,163 @@
+"""The TrainTask axis: real-model P2P training vs the paper's 2NN MLP.
+
+Two registered tasks run the SAME jitted round through ``run_paper_experiment``
+(`core/task.py` selects the bundle by ``P2PConfig.model``):
+
+* ``mnist_mlp`` — the paper's 2NN, routed through the task layer.  The task
+  layer's contract is that this path is STRUCTURALLY the legacy trainer
+  (identity callables, not wrappers), so the benchmark re-derives the legacy
+  final state from primitives and gates bit parity as a boolean.
+* ``rwkv6_seqmnist`` — RWKV6 in RNN mode on 196-token pixel-stream MNIST, a
+  real multi-layer parameter tree (embeddings, layernorms, time/channel
+  mixes, LoRA decay projections) under gossip on non-IID label shards.
+
+Rows (``name, us_per_call, derived`` — us measured, derived deterministic):
+
+    models_mnist_mlp_round         us col = wall-clock us/round (vmap),
+                                   derived = final mean train loss
+    models_mnist_mlp_bit_parity    us col = 0, derived = 1.0 iff the
+                                   task-routed trainer's final params are
+                                   bit-identical leaf-for-leaf to a
+                                   hand-built legacy (bare-callable) driver
+    models_rwkv6_vmap_round        us col = wall-clock us/round (K=2 vmap),
+                                   derived = final mean train loss
+    models_rwkv6_pod_round         us col = wall-clock us/round (K=8 pod,
+                                   needs 8 devices), derived = final loss
+
+plus the CI-gated boolean — the claim the task layer exists to deliver:
+
+    models_rwkv6_loss_decreases    us col = first/final loss ratio,
+                                   derived = 1.0 iff the rwkv6 fleet's train
+                                   loss strictly decreases over the run
+
+All runs are seeded and deterministic; ``benchmarks/compare.py`` gates every
+``derived`` against the committed ``BENCH_models.json``.  The pod row needs
+the 8 forced host devices — a smaller run emits a SKIPPED row and ``run.py``
+refuses to write the file.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.p2pl_mnist import PaperExperiment, noniid_k2, seqmnist_k8
+from repro.core import p2p
+from repro.data import partition, pipeline, synthetic
+from repro.launch.train import run_paper_experiment
+from repro.models import mlp
+
+
+def _legacy_mlp_final_state(exp, data, rounds, *, seed=0):
+    """The pre-TrainTask trainer, from primitives: bare ``mlp.*`` callables
+    and ``pipeline.PeerBatcher`` under the scan driver."""
+    import jax.numpy as jnp
+
+    x_tr, y_tr, _, _ = data
+    parts = partition.pathological_partition(
+        x_tr, y_tr, list(exp.peer_classes),
+        samples_per_class=exp.samples_per_class,
+    )
+    sizes = partition.data_sizes(parts)
+    cfg = exp.p2p
+    batcher = pipeline.PeerBatcher(parts, exp.batch_size, seed=seed)
+    state = p2p.init_state(
+        jax.random.PRNGKey(seed), mlp.init_2nn, cfg, data_sizes=sizes
+    )
+    drive = p2p.make_scan_driver(mlp.loss_2nn, cfg, data_sizes=sizes)
+    for _ in range(rounds):
+        bx, by = batcher.round_batches(cfg.local_steps)
+        bx = bx.reshape((1, cfg.local_steps) + bx.shape[1:])
+        by = by.reshape((1, cfg.local_steps) + by.shape[1:])
+        _, state, _ = drive(state, (jnp.asarray(bx), jnp.asarray(by)))
+    return state
+
+
+def _bit_identical(want, got) -> bool:
+    wl = jax.tree_util.tree_leaves(want)
+    gl = jax.tree_util.tree_leaves(got)
+    return len(wl) == len(gl) and all(
+        np.array_equal(np.asarray(a), np.asarray(b)) for a, b in zip(wl, gl)
+    )
+
+
+def _rwkv6_k2(protocol: str = "gossip") -> PaperExperiment:
+    """CI-scale rwkv6 fleet: K=2 disjoint 2-class shards, complete graph."""
+    return PaperExperiment(
+        name=f"models_rwkv6_k2_{protocol}",
+        p2p=p2p.P2PConfig(
+            algorithm="p2pl",
+            num_peers=2,
+            local_steps=2,
+            consensus_steps=1,
+            lr=0.05,
+            topology="complete",
+            mixing="data_weighted",
+            protocol=protocol,
+            model="rwkv6_seqmnist",
+        ),
+        batch_size=8,
+        samples_per_class=20,
+        peer_classes=((0, 1), (2, 3)),
+    )
+
+
+def models(full=False):
+    """Per-round wall-clock + loss trajectory for each registered task."""
+    out = []
+
+    # --- mnist_mlp through the task layer, plus the bit-parity boolean -----
+    mlp_rounds = 12 if full else 4
+    mlp_data = synthetic.mnist_like(4000, 1000)
+    exp = noniid_k2(algorithm="p2pl_affinity", local_steps=4)
+    t0 = time.time()
+    log, state = run_paper_experiment(
+        exp, rounds=mlp_rounds, data=mlp_data, return_state=True
+    )
+    us = (time.time() - t0) / mlp_rounds * 1e6
+    out.append((
+        "models_mnist_mlp_round", us, float(np.mean(log.train_loss[-1]))
+    ))
+    legacy = _legacy_mlp_final_state(exp, mlp_data, mlp_rounds)
+    out.append((
+        "models_mnist_mlp_bit_parity", 0.0,
+        1.0 if _bit_identical(legacy.params, state.params) else 0.0,
+    ))
+
+    # --- rwkv6_seqmnist, vmap, K=2 at CI scale -----------------------------
+    rwkv_rounds = 6 if full else 3
+    rwkv_data = synthetic.mnist_like(2000, 300)
+    t0 = time.time()
+    log = run_paper_experiment(_rwkv6_k2(), rounds=rwkv_rounds, data=rwkv_data)
+    us = (time.time() - t0) / rwkv_rounds * 1e6
+    losses = np.asarray(log.train_loss, np.float64)
+    first, final = float(np.mean(losses[0])), float(np.mean(losses[-1]))
+    out.append(("models_rwkv6_vmap_round", us, final))
+    out.append((
+        "models_rwkv6_loss_decreases",
+        first / final,  # us col carries the improvement ratio
+        1.0 if final < first else 0.0,
+    ))
+
+    # --- rwkv6_seqmnist, pod, K=8 (one device per peer) --------------------
+    if jax.device_count() < 8:
+        out.append(("models_rwkv6_pod_round_SKIPPED_need_8_devices", 0.0, 0.0))
+        return out
+    pod_rounds = 4 if full else 2
+    exp = seqmnist_k8(local_steps=2)
+    t0 = time.time()
+    log = run_paper_experiment(
+        exp, rounds=pod_rounds, data=rwkv_data, peer_axis="pod",
+        eval_every=pod_rounds,
+    )
+    us = (time.time() - t0) / pod_rounds * 1e6
+    out.append((
+        "models_rwkv6_pod_round", us, float(np.mean(log.train_loss[-1]))
+    ))
+    return out
+
+
+ALL_MODELS = {
+    "models": models,
+}

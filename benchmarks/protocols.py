@@ -211,7 +211,7 @@ def compression_pareto(full=False):
     bytes_round = {}
     for name, compressor in COMPRESSION_VARIANTS:
         exp = timevarying_k8(
-            "round_robin", "p2pl_affinity", 10,
+            schedule="round_robin", algorithm="p2pl_affinity", local_steps=10,
             compressor=compressor, topk_frac=TOPK_FRAC,
         )
         cfg = exp.p2p

@@ -5,12 +5,14 @@ round-loop driver rows to ``BENCH_roundloop.json``, the adaptive
 partner-selection rows to ``BENCH_adaptive.json``, the K-scaling rows to
 ``BENCH_scaling.json``, the compression Pareto rows to
 ``BENCH_compression.json``, the sync-vs-async straggler rows to
-``BENCH_straggler.json``, and the stacked-fleet serving rows to
-``BENCH_serving.json`` so the perf trajectories (spectral gap, consensus
+``BENCH_straggler.json``, the stacked-fleet serving rows to
+``BENCH_serving.json``, and the TrainTask real-model rows to
+``BENCH_models.json`` so the perf trajectories (spectral gap, consensus
 error, wall-clock per round, scan-vs-python speedup, oscillation damping,
 sub-quadratic K-scaling, bytes-vs-accuracy compression, async
-wall-clock-to-accuracy, stacked-vs-sequential serving throughput and the
-personalized-vs-consensus accuracy A/B) accumulate across PRs.  See benchmarks/README.md for the
+wall-clock-to-accuracy, stacked-vs-sequential serving throughput, the
+personalized-vs-consensus accuracy A/B, and the real-model per-round cost
+and loss trajectory) accumulate across PRs.  See benchmarks/README.md for the
 file contract.  ``--only`` with an unknown name errors out listing the
 registry (a typo used to silently run nothing).
 
@@ -61,11 +63,15 @@ def main(argv=None) -> None:
     ap.add_argument("--serving-json-out", default="BENCH_serving.json",
                     help="where to write the stacked-fleet serving "
                          "benchmark rows ('' disables)")
+    ap.add_argument("--models-json-out", default="BENCH_models.json",
+                    help="where to write the TrainTask real-model "
+                         "benchmark rows ('' disables)")
     args = ap.parse_args(argv)
 
     from benchmarks.adaptive import ALL_ADAPTIVE
     from benchmarks.figures import ALL_FIGURES
     from benchmarks.kernels import ALL_KERNELS
+    from benchmarks.models import ALL_MODELS
     from benchmarks.peer_axis import ALL_PEER_AXIS
     from benchmarks.protocols import ALL_COMPRESSION, ALL_PROTOCOLS
     from benchmarks.roundloop import ALL_ROUNDLOOP, ALL_SCALING
@@ -76,7 +82,7 @@ def main(argv=None) -> None:
     benches = {**ALL_KERNELS, **ALL_FIGURES, **ALL_SCHEDULES, **ALL_PROTOCOLS,
                **ALL_PEER_AXIS, **ALL_ROUNDLOOP, **ALL_ADAPTIVE,
                **ALL_SCALING, **ALL_COMPRESSION, **ALL_STRAGGLER,
-               **ALL_SERVING}
+               **ALL_SERVING, **ALL_MODELS}
     only = set(args.only.split(",")) if args.only else None
     if only:
         # a typo'd --only used to silently run NOTHING (and exit 0) — fail
@@ -95,6 +101,7 @@ def main(argv=None) -> None:
     compression_rows = []
     straggler_rows = []
     serving_rows = []
+    models_rows = []
     print("name,us_per_call,derived")
     for name, fn in benches.items():
         if only and name not in only:
@@ -121,6 +128,8 @@ def main(argv=None) -> None:
                 straggler_rows += rows
             if name in ALL_SERVING:
                 serving_rows += rows
+            if name in ALL_MODELS:
+                models_rows += rows
         except Exception:  # noqa: BLE001
             failures += 1
             print(f"{name},ERROR,0", flush=True)
@@ -160,6 +169,15 @@ def main(argv=None) -> None:
                   "--xla_force_host_platform_device_count=8)", file=sys.stderr)
         else:
             _write_rows(args.serving_json_out, serving_rows, "serving")
+    if args.models_json_out:
+        if any("SKIPPED" in row["name"] for row in models_rows):
+            # a <8-device run has no pod rows: writing it would clobber a
+            # committed baseline with a file the CI gate can never match
+            print(f"NOT writing {args.models_json_out}: the rwkv6 pod row was "
+                  "SKIPPED (need 8 devices — set XLA_FLAGS="
+                  "--xla_force_host_platform_device_count=8)", file=sys.stderr)
+        else:
+            _write_rows(args.models_json_out, models_rows, "models")
     if failures:
         sys.exit(1)
 

@@ -72,7 +72,8 @@ def schedule_training(full=False):
     data = synthetic.mnist_like(20000 if full else 6000, 4000 if full else 1500)
     out = []
     for schedule in ("static", "link_dropout", "random_matching"):
-        exp = timevarying_k2(schedule, "local_dsgd", 10, link_survival_prob=0.7)
+        exp = timevarying_k2(schedule=schedule, algorithm="local_dsgd",
+                             local_steps=10, link_survival_prob=0.7)
         t0 = time.time()
         log = run_paper_experiment(exp, rounds=rounds, data=data)
         us = (time.time() - t0) / rounds * 1e6

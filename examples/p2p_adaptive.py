@@ -45,7 +45,8 @@ def main():
     ]
     for label, schedule, rule in variants:
         exp = timevarying_k8(
-            schedule, args.algorithm, 10, protocol=args.protocol,
+            schedule=schedule, algorithm=args.algorithm, local_steps=10,
+            protocol=args.protocol,
             partner_rule=rule, adaptive_eps=args.adaptive_eps,
         )
         log = run_paper_experiment(exp, rounds=args.rounds, data=data)

@@ -48,7 +48,7 @@ def main():
     rows = []
     for name in ("none", "topk", "qint8"):
         exp = timevarying_k8(
-            "round_robin", "p2pl_affinity", 10,
+            schedule="round_robin", algorithm="p2pl_affinity", local_steps=10,
             compressor=name, topk_frac=args.topk_frac,
         )
         cfg = exp.p2p

@@ -22,9 +22,11 @@ def main():
 
     data = synthetic.mnist_like(20000, 5000)
     print("== local DSGD (T=10) ==")
-    log_plain = run_paper_experiment(noniid_k2("local_dsgd", 10), rounds=args.rounds, data=data)
+    log_plain = run_paper_experiment(
+        noniid_k2(algorithm="local_dsgd", local_steps=10),
+        rounds=args.rounds, data=data)
     print("== P2PL with Affinity (T=10, eta_d=0.5) ==")
-    aff = noniid_k2("p2pl_affinity", 10)
+    aff = noniid_k2(algorithm="p2pl_affinity", local_steps=10)
     # eta_d=0.5 (not the paper's 1.0): stable for K=2 full averaging — see
     # EXPERIMENTS.md observation O1
     aff = dataclasses.replace(aff, p2p=dataclasses.replace(aff.p2p, eta_d=0.5))

@@ -38,7 +38,8 @@ def main():
 
     data = synthetic.mnist_like(20000, 5000)
     for protocol in ("gossip", "push_sum"):
-        exp = directed_k8(args.schedule, protocol, args.algorithm, 10)
+        exp = directed_k8(schedule=args.schedule, protocol=protocol,
+                          algorithm=args.algorithm, local_steps=10)
         sched = p2p.build_schedule(exp.p2p)
         print(f"== {protocol} on directed {args.schedule}: period {sched.period}, "
               f"union strongly connected: {sched.union_is_strongly_connected()} ==")

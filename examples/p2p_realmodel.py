@@ -1,0 +1,68 @@
+"""Beyond the paper: a REAL recurrent model on the peer axis.
+
+The paper trains a 2NN MLP; edge fleets train real architectures.  The
+`TrainTask` registry (`core/task.py`) makes the model an axis of the config:
+`--model rwkv6_seqmnist` swaps the 2NN for a reduced RWKV6 running in RNN
+mode over 196-token pixel-stream MNIST (2x2 mean-pool, 16 fixed luminance
+bins — `data/pipeline.py:images_to_tokens`), and NOTHING else changes: the
+same jitted round, the same gossip / push-sum consensus, the same non-IID
+label shards, now mixing a deep parameter tree (embeddings, layernorms,
+time/channel mixes, LoRA decay projections) instead of four matrices.
+
+This example trains a K=2 disjoint-shard fleet under both protocols and
+prints the loss trajectory and per-peer accuracies — each peer only ever
+sees 2 of the 4 classes, so the "all" accuracy is earned by consensus, not
+by local data.
+
+    PYTHONPATH=src python examples/p2p_realmodel.py [--rounds 6]
+"""
+import argparse
+
+import numpy as np
+
+from repro.configs.p2pl_mnist import PaperExperiment
+from repro.core import p2p
+from repro.data import synthetic
+from repro.launch.train import run_paper_experiment
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=6)
+    ap.add_argument("--local-steps", type=int, default=2)
+    ap.add_argument("--lr", type=float, default=0.05)
+    args = ap.parse_args()
+
+    data = synthetic.mnist_like(4000, 600)
+    for protocol in ("gossip", "push_sum"):
+        exp = PaperExperiment(
+            name=f"realmodel_{protocol}",
+            p2p=p2p.P2PConfig(
+                algorithm="p2pl",
+                num_peers=2,
+                local_steps=args.local_steps,
+                consensus_steps=1,
+                lr=args.lr,
+                topology="complete",
+                mixing="data_weighted",
+                protocol=protocol,
+                model="rwkv6_seqmnist",
+            ),
+            batch_size=8,
+            samples_per_class=30,
+            peer_classes=((0, 1), (2, 3)),
+        )
+        print(f"== rwkv6_seqmnist under {protocol}: K=2, disjoint 2-class "
+              f"shards, T={args.local_steps} ==")
+        log = run_paper_experiment(exp, rounds=args.rounds, data=data)
+        losses = np.asarray(log.train_loss, np.float64)
+        acc = np.stack(log.after_consensus["all"])
+        print(f"  train loss               : {np.round(losses, 4)}")
+        print(f"  loss decreased           : {bool(losses[-1] < losses[0])}")
+        print(f"  final accuracy (all)     : {log.final_accuracy('all'):.4f}")
+        print(f"  per-peer final accuracy  : {np.round(acc[-1], 3)}")
+        print()
+
+
+if __name__ == "__main__":
+    main()

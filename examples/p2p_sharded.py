@@ -42,7 +42,8 @@ def main():
     ap.add_argument("--protocol", default="gossip", choices=["gossip", "push_sum"])
     args = ap.parse_args()
 
-    exp = sharded_k8(args.schedule, args.protocol, local_steps=5)
+    exp = sharded_k8(schedule=args.schedule, protocol=args.protocol,
+                     local_steps=5)
     if len(jax.devices()) < exp.p2p.num_peers:
         sys.exit(
             f"need {exp.p2p.num_peers} devices, found {len(jax.devices())} — "

@@ -29,7 +29,8 @@ def main():
 
     data = synthetic.mnist_like(20000, 5000)
     for schedule in ("static", "link_dropout", "random_matching"):
-        exp = timevarying_k2(schedule, args.algorithm, 10, link_survival_prob=0.7)
+        exp = timevarying_k2(schedule=schedule, algorithm=args.algorithm,
+                             local_steps=10, link_survival_prob=0.7)
         sched = p2p.build_schedule(exp.p2p)
         w, _ = graph_lib.schedule_matrices(sched, exp.p2p.mixing)
         up = [g.degree().sum() > 0 for g in sched.graphs]

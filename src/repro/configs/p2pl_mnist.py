@@ -18,9 +18,27 @@ class PaperExperiment:
     rounds: int = 40
     seen_classes: tuple = ()
     peer_classes: tuple = ()  # tuple of per-peer class tuples (non-IID)
+    model: str = "mnist_mlp"  # one of core.task.task_names()
+
+    def __post_init__(self):
+        # the model is named in two places (the experiment, for the launcher
+        # and data pipeline; the P2PConfig, for the feature table) — keep them
+        # one value: a non-default on either side propagates to both, and two
+        # CONFLICTING non-defaults are an error, not a silent pick
+        if self.model != self.p2p.model:
+            if self.model != "mnist_mlp" and self.p2p.model != "mnist_mlp":
+                raise ValueError(
+                    f"experiment model {self.model!r} conflicts with "
+                    f"p2p.model {self.p2p.model!r}"
+                )
+            chosen = self.model if self.model != "mnist_mlp" else self.p2p.model
+            object.__setattr__(self, "model", chosen)
+            object.__setattr__(
+                self, "p2p", dataclasses.replace(self.p2p, model=chosen)
+            )
 
 
-def iid_k100(topology: str = "complete") -> PaperExperiment:
+def iid_k100(*, topology: str = "complete") -> PaperExperiment:
     """Fig. 2: K=100, IID, 600 samples each, T=60, momentum 0.5."""
     return PaperExperiment(
         name=f"iid_k100_{topology}",
@@ -40,10 +58,10 @@ def iid_k100(topology: str = "complete") -> PaperExperiment:
 
 
 def timevarying_k2(
+    *,
     schedule: str = "link_dropout",
     algorithm: str = "p2pl_affinity",
     local_steps: int = 10,
-    *,
     schedule_rounds: int = 16,
     link_survival_prob: float = 0.7,
     peer_online_prob: float = 0.8,
@@ -92,10 +110,10 @@ def timevarying_k2(
 
 
 def timevarying_k8(
+    *,
     schedule: str = "random_matching",
     algorithm: str = "p2pl_affinity",
     local_steps: int = 10,
-    *,
     schedule_rounds: int = 16,
     link_survival_prob: float = 0.7,
     peer_online_prob: float = 0.8,
@@ -146,11 +164,11 @@ def timevarying_k8(
 
 
 def directed_k8(
+    *,
     schedule: str = "static",
     protocol: str = "push_sum",
     algorithm: str = "p2pl_affinity",
     local_steps: int = 10,
-    *,
     schedule_rounds: int = 16,
     link_survival_prob: float = 0.7,
     schedule_seed: int = 0,
@@ -210,11 +228,11 @@ def directed_k8(
 
 
 def sharded_k8(
+    *,
     schedule: str = "static",
     protocol: str = "gossip",
     algorithm: str = "p2pl_affinity",
     local_steps: int = 10,
-    *,
     topology: str = "ring",
     schedule_rounds: int = 16,
     link_survival_prob: float = 0.7,
@@ -266,11 +284,11 @@ def sharded_k8(
 
 
 def straggler_k8(
+    *,
     schedule: str = "static",
     protocol: str = "gossip",
     algorithm: str = "p2pl_affinity",
     local_steps: int = 8,
-    *,
     steps_profile: str = "straggler",
     staleness_bound: int = 3,
     staleness_decay: float = 0.5,
@@ -332,7 +350,7 @@ def straggler_k8(
     )
 
 
-def noniid_k2(algorithm: str = "local_dsgd", local_steps: int = 10) -> PaperExperiment:
+def noniid_k2(*, algorithm: str = "local_dsgd", local_steps: int = 10) -> PaperExperiment:
     """Fig. 3cd/6: K=2, pathological non-IID (A: {0,1}, B: {7,8})."""
     return PaperExperiment(
         name=f"noniid_k2_{algorithm}_T{local_steps}",
@@ -350,4 +368,58 @@ def noniid_k2(algorithm: str = "local_dsgd", local_steps: int = 10) -> PaperExpe
         samples_per_class=50,
         rounds=60,
         peer_classes=((0, 1), (7, 8)),
+    )
+
+
+def seqmnist_k8(
+    *,
+    schedule: str = "static",
+    protocol: str = "gossip",
+    algorithm: str = "p2pl",
+    local_steps: int = 4,
+    lr: float = 0.05,
+    topology: str = "ring",
+    rounds: int = 20,
+    schedule_rounds: int = 16,
+    round_robin_topologies: tuple = ("ring", "star"),
+) -> PaperExperiment:
+    """The first real-model workload: RWKV6 on sequential MNIST, 8 peers.
+
+    Same non-IID shape as ``sharded_k8`` (2 classes per peer on a ring, sized
+    to CI's 8 forced host devices) but the task is ``rwkv6_seqmnist``: each
+    image becomes a 196-token pixel stream and every peer trains the reduced
+    RWKV6 of ``core.task.seqmnist_model_config`` — so gossip and push_sum mix
+    a real multi-layer parameter tree (embeddings, layernorms, time/channel
+    mixes, LoRA decay projections), not the 2NN's four matrices.
+
+    T=4 and lr=0.05: the recurrent trunk is ~50x the MLP's FLOPs per step,
+    and plain SGD on the (max-norm-synced — algorithm="p2pl") init moves the
+    cross-entropy reliably at 0.05 where 0.01 is visibly slow in 20 rounds.
+
+        XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+            python -m repro.launch.train --experiment seqmnist_k8 --rounds 4
+    """
+    peer_classes = tuple(((2 * k) % 10, (2 * k + 1) % 10) for k in range(8))
+    return PaperExperiment(
+        name=f"seqmnist_k8_{schedule}_{protocol}_{algorithm}_T{local_steps}",
+        p2p=P2PConfig(
+            algorithm=algorithm,
+            num_peers=8,
+            local_steps=local_steps,
+            consensus_steps=1,
+            lr=lr,
+            momentum=0.0,
+            topology=topology,
+            mixing="data_weighted",
+            schedule=schedule,
+            schedule_rounds=schedule_rounds,
+            round_robin_topologies=round_robin_topologies,
+            protocol=protocol,
+            model="rwkv6_seqmnist",
+        ),
+        batch_size=10,
+        samples_per_class=50,
+        rounds=rounds,
+        peer_classes=peer_classes,
+        model="rwkv6_seqmnist",
     )

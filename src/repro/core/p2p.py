@@ -63,6 +63,7 @@ import numpy as np
 
 from repro import compression as compression_lib
 from repro.core import consensus as consensus_lib
+from repro.core import features as features_lib
 from repro.core import graph as graph_lib
 from repro.core import protocols as protocols_lib
 
@@ -70,6 +71,25 @@ PyTree = Any
 LossFn = Callable[[PyTree, Any], jax.Array]  # (per-peer params, per-peer batch) -> scalar
 
 ALGORITHMS = ("dsgd", "local_dsgd", "p2pl", "p2pl_affinity", "isolated")
+
+
+def resolve_loss_fn(task_or_loss) -> LossFn:
+    """A ``core.task.TrainTask`` or a bare loss callable -> the loss callable.
+
+    Every driver entry point (``local_phase``, ``run_round``, ``make_*``)
+    accepts either form; a task contributes exactly its ``loss_fn``
+    attribute — no wrapper — so passing ``get_task("mnist_mlp")`` traces the
+    IDENTICAL program as passing ``models.mlp.loss_2nn`` directly (the
+    bit-parity contract of the legacy task).
+    """
+    loss_fn = getattr(task_or_loss, "loss_fn", None)
+    return task_or_loss if loss_fn is None else loss_fn
+
+
+def resolve_init_fn(task_or_init) -> Callable[[jax.Array], PyTree]:
+    """A ``core.task.TrainTask`` or a bare per-peer init callable -> the init."""
+    init_fn = getattr(task_or_init, "init_params", None)
+    return task_or_init if init_fn is None else init_fn
 
 # Config-declared per-peer compute profiles (``P2PConfig.steps_profile``):
 # "uniform" is the bulk-synchronous baseline (every peer runs the full T local
@@ -121,6 +141,8 @@ class P2PConfig:
     staleness_decay: float = 0.5  # weight decay base per round of staleness
     straggler_frac: float = 0.25  # slow-peer fraction ("straggler" profile)
     straggler_period: int = 4  # slowdown factor of the slowest peer
+    # -- training task (core/task.py registry): what the peers train --------
+    model: str = "mnist_mlp"  # one of task.task_names()
 
     def __post_init__(self):
         """Validate the config and reject unsupported feature compositions."""
@@ -173,24 +195,16 @@ class P2PConfig:
             raise ValueError("straggler_frac must be in (0, 1]")
         if self.straggler_period < 1:
             raise ValueError("straggler_period must be >= 1")
-        if self.staleness_bound > 0 and self.schedule == "adaptive":
+        from repro.core import task as task_lib  # lazy: avoids import weight
+
+        if self.model not in task_lib.task_names():
             raise ValueError(
-                "staleness_bound > 0 is not supported with schedule="
-                "'adaptive': the adaptive matching is derived from FRESH "
-                "per-peer losses every round, which is exactly what a "
-                "straggler cannot provide; run bounded-staleness gossip on a "
-                "pretraced schedule, or adaptive selection synchronously "
-                "(staleness_bound=0)"
+                f"unknown model {self.model!r}; one of {task_lib.task_names()}"
             )
-        if self.staleness_bound > 0 and self.compressor != "none":
-            raise ValueError(
-                f"staleness_bound > 0 is not supported with compressor="
-                f"{self.compressor!r}: the staleness buffer stores raw "
-                "sender snapshots while the compressed wire stores payload-"
-                "advanced estimates — composing the two buffers is an open "
-                "item; run async rounds uncompressed, or compression "
-                "synchronously (staleness_bound=0)"
-            )
+        # every pairwise composition rule lives in the ONE declarative table
+        # (core/features.py) — config-level pairs fire here, runtime-level
+        # pairs (e.g. x hierarchical) fire where peers_per_device is known
+        features_lib.check_config(self)
         if self.schedule == "round_robin" and not self.round_robin_topologies:
             raise ValueError("round_robin schedule needs round_robin_topologies")
         object.__setattr__(
@@ -440,7 +454,11 @@ def init_state(
     ``data_sizes`` seeds the protocol state — for push_sum, initial mass
     proportional to n_k makes the de-biased estimates track the
     *data-weighted* parameter average (uniform mass without it).
+
+    ``init_fn`` may be a bare per-peer init callable or a
+    ``core.task.TrainTask`` (its ``init_params`` is used).
     """
+    init_fn = resolve_init_fn(init_fn)
     keys = jax.random.split(rng, cfg.num_peers)
     params = jax.vmap(init_fn)(keys)
     if cfg.use_max_norm_init:
@@ -520,6 +538,7 @@ def _local_phase_stats(
     profile) is the structurally unmasked legacy scan — the bit-identity
     baseline.
     """
+    loss_fn = resolve_loss_fn(loss_fn)
     # one forward serves both the loss value and the gradient: cheaper than
     # separate vmap(loss)/vmap(grad) passes, and it pins the loss to the same
     # expression graph in the vmap and shard_map runtimes (a standalone
@@ -1353,30 +1372,10 @@ def _make_hier_round_step(
     """
     from repro.sharding import specs as specs_lib
 
-    if cfg.schedule == "adaptive":
-        raise ValueError(
-            "schedule='adaptive' is not supported on the hierarchical "
-            "(peers_per_device > 1) runtime: its candidate lane set is the "
-            "complete graph — O(K^2) by construction — which is exactly what "
-            "the sparse degree-bounded path exists to avoid; run adaptive "
-            "schedules with one peer per device, or a pretraced schedule here"
-        )
-    if cfg.compressor != "none":
-        raise ValueError(
-            f"compressor={cfg.compressor!r} is not supported on the "
-            "hierarchical (peers_per_device > 1) runtime: its bridge/segment "
-            "mixes stream raw fp32 blocks; run compressed gossip with one "
-            "peer per device (peers_per_device=1), or compressor='none' here"
-        )
-    if cfg.use_async:
-        raise ValueError(
-            f"asynchronous rounds (steps_profile={cfg.steps_profile!r}, "
-            f"staleness_bound={cfg.staleness_bound}) are not supported on "
-            "the hierarchical (peers_per_device > 1) runtime: its "
-            "bridge/segment mixes stream live parameter blocks with no "
-            "staleness buffer; run async rounds with one peer per device "
-            "(peers_per_device=1), or the uniform synchronous profile here"
-        )
+    # adaptive / compression / async / real-model x hierarchical: all four
+    # rejections come from the declarative table, through the one formatter
+    features_lib.check_config(cfg, peers_per_device=peers_per_device)
+    loss_fn = resolve_loss_fn(loss_fn)
     if mix_mode not in MIX_MODES:
         raise ValueError(f"unknown mix_mode {mix_mode!r}; one of {MIX_MODES}")
     num_devices, _ = specs_lib.hierarchical_layout(
@@ -1506,6 +1505,7 @@ def _make_round_step(
             loss_fn, cfg, data_sizes, mesh=mesh, axis_name=axis_name,
             peers_per_device=peers_per_device, mix_mode=mix_mode,
         )
+    loss_fn = resolve_loss_fn(loss_fn)
     adaptive = cfg.schedule == "adaptive"
     proto = protocols_lib.get_protocol(cfg.protocol)
     sizes_dev = (

@@ -65,6 +65,75 @@ class PeerBatcher:
             yield self.round_batches(local_steps)
 
 
+def images_to_tokens(
+    x: np.ndarray,
+    *,
+    num_bins: int = 16,
+    pool: int = 2,
+    side: int = 28,
+) -> np.ndarray:
+    """Flat images (N, side*side) f32 -> pixel-stream tokens (N, L) int32.
+
+    The sequential-MNIST transform: ``pool`` x ``pool`` average pooling
+    (784 -> 196 positions at the default), then each pooled intensity is
+    quantized into one of ``num_bins`` levels over a FIXED affine range — a
+    dataset constant, not a per-batch statistic, so the same pixel always
+    maps to the same token and train/eval tokenizations agree.  The range
+    [-3, 4] covers ``synthetic.mnist_like``'s prototype * brightness + unit
+    Gaussian noise; values outside clip into the edge bins.
+    """
+    if side % pool:
+        raise ValueError(f"pool={pool} does not divide side={side}")
+    n = x.shape[0]
+    imgs = np.asarray(x, np.float32).reshape(n, side, side)
+    if pool > 1:
+        s = side // pool
+        imgs = imgs.reshape(n, s, pool, s, pool).mean(axis=(2, 4))
+    lo, hi = -3.0, 4.0
+    u = np.clip((imgs - lo) / (hi - lo), 0.0, np.nextafter(1.0, 0.0))
+    return np.floor(u * num_bins).astype(np.int32).reshape(n, -1)
+
+
+class TokenSequenceBatcher:
+    """``PeerBatcher`` for sequence models: image shards, token batches.
+
+    Tokenizes each peer's shard ONCE up front (``images_to_tokens``), then
+    delegates sampling to an inner ``PeerBatcher`` — identical cursor /
+    reshuffle / seed behavior, so sequence tasks see the same epoch structure
+    as the MLP.  ``round_batches(T)`` returns ``(tokens (T, K, B, L) int32,
+    labels (T, K, B) int32)`` — the same two-leaf tuple contract, so the
+    drivers' stacking and scan-chunk reshapes apply unchanged.
+    """
+
+    def __init__(
+        self,
+        parts: list[tuple[np.ndarray, np.ndarray]],
+        batch_size: int,
+        *,
+        seed: int = 0,
+        reshuffle: bool = True,
+        num_bins: int = 16,
+        pool: int = 2,
+    ):
+        tok_parts = [
+            (images_to_tokens(px, num_bins=num_bins, pool=pool),
+             np.asarray(py, np.int32))
+            for px, py in parts
+        ]
+        self.inner = PeerBatcher(tok_parts, batch_size, seed=seed,
+                                 reshuffle=reshuffle)
+
+    @property
+    def num_peers(self) -> int:
+        return self.inner.num_peers
+
+    def round_batches(self, local_steps: int) -> tuple[np.ndarray, np.ndarray]:
+        return self.inner.round_batches(local_steps)
+
+    def rounds(self, num_rounds: int, local_steps: int):
+        return self.inner.rounds(num_rounds, local_steps)
+
+
 def global_to_peer_batch(x: np.ndarray, num_peers: int) -> np.ndarray:
     """Split a global batch along axis 0 into a leading peer axis."""
     b = x.shape[0]

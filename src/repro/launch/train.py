@@ -1,9 +1,11 @@
 """Training drivers.
 
-``run_paper_experiment`` — the paper's own workload: K peers training 2NN
-MLPs on (synthetic-)MNIST under the P2PL-with-Affinity family, measuring test
-accuracy after BOTH phases of every round (the paper's instrument).  Runs the
-stacked/vmap runtime on CPU; this is the end-to-end driver deliverable.
+``run_paper_experiment`` — K peers training the experiment's ``TrainTask``
+(``core/task.py``: the paper's 2NN MLP by default, ``--model rwkv6_seqmnist``
+for RWKV6 on sequential MNIST) on (synthetic-)MNIST shards under the
+P2PL-with-Affinity family, measuring test accuracy after BOTH phases of every
+round (the paper's instrument).  Runs the stacked/vmap runtime on CPU; this
+is the end-to-end driver deliverable.
 
 ``run_p2p_lm`` — the same algorithm family applied to the LLM substrate:
 K peers train a (reduced) assigned architecture on disjoint token shards,
@@ -31,6 +33,7 @@ from repro.configs.p2pl_mnist import (
     directed_k8,
     iid_k100,
     noniid_k2,
+    seqmnist_k8,
     sharded_k8,
     straggler_k8,
     timevarying_k2,
@@ -38,12 +41,14 @@ from repro.configs.p2pl_mnist import (
 )
 from repro import compression as compression_lib
 from repro.core import consensus as consensus_lib
+from repro.core import features as features_lib
 from repro.core import graph as graph_lib
 from repro.core import metrics as metrics_lib
 from repro.core import p2p
 from repro.core import protocols as protocols_lib
-from repro.data import partition, pipeline, synthetic
-from repro.models import build_model, mlp
+from repro.core import task as task_lib
+from repro.data import partition, synthetic
+from repro.models import build_model
 
 
 def _mnist_parts(exp: PaperExperiment, x, y):
@@ -107,23 +112,12 @@ def run_paper_experiment(
             "it needs peer_axis='pod' (the vmap runtime already holds every "
             "peer on one device)"
         )
-    # fail fast — before data generation and tracing — on the combinations
-    # the hierarchical runtime rejects, with the documented workaround
-    if peers_per_device > 1 and exp.p2p.schedule == "adaptive":
-        raise ValueError(
-            "schedule='adaptive' is not supported with peers_per_device > 1: "
-            "the adaptive candidate set is the complete graph — dense O(K^2) "
-            "matrices the hierarchical runtime's sparse degree-bounded path "
-            "exists to avoid; run adaptive schedules with one peer per device "
-            "(peers_per_device=1), or use a pretraced schedule here"
-        )
-    if peers_per_device > 1 and exp.p2p.compressor != "none":
-        raise ValueError(
-            f"compressor={exp.p2p.compressor!r} is not supported with "
-            "peers_per_device > 1: the hierarchical bridge/segment mixes "
-            "stream raw fp32 blocks; run compressed gossip with one peer per "
-            "device (peers_per_device=1), or compressor='none' here"
-        )
+    # fail fast — before data generation and tracing — on the compositions the
+    # declarative feature table rejects (core/features.py), with the
+    # documented workaround; the hierarchical pairs fire here because this is
+    # where peers_per_device is first known
+    features_lib.check_config(exp.p2p, peers_per_device=peers_per_device)
+    task = task_lib.get_task(exp.p2p.model)
     if data is None:
         data = synthetic.mnist_like()
     x_tr, y_tr, x_te, y_te = data
@@ -131,10 +125,10 @@ def run_paper_experiment(
     sizes = partition.data_sizes(parts)
     cfg = exp.p2p
 
-    batcher = pipeline.PeerBatcher(parts, exp.batch_size, seed=seed)
+    batcher = task.make_peer_batches(parts, exp.batch_size, seed=seed)
     # data_sizes seed both the mixing weights and the protocol state (for
     # push_sum: initial mass proportional to n_k -> data-weighted consensus).
-    state = p2p.init_state(jax.random.PRNGKey(seed), mlp.init_2nn, cfg, data_sizes=sizes)
+    state = p2p.init_state(jax.random.PRNGKey(seed), task, cfg, data_sizes=sizes)
     mesh = None
     if peer_axis == "pod":
         from repro.launch import mesh as mesh_lib
@@ -152,14 +146,14 @@ def run_paper_experiment(
     hier = dict(peers_per_device=peers_per_device, mix_mode=mix_mode)
     if driver == "scan":
         drive_fn = p2p.make_scan_driver(
-            mlp.loss_2nn, cfg, data_sizes=sizes, mesh=mesh, **hier
+            task, cfg, data_sizes=sizes, mesh=mesh, **hier
         )
     elif peer_axis == "pod":
         round_fn = p2p.make_sharded_round_fn(
-            mlp.loss_2nn, cfg, mesh, data_sizes=sizes, **hier
+            task, cfg, mesh, data_sizes=sizes, **hier
         )
     else:
-        round_fn = p2p.make_round_fn(mlp.loss_2nn, cfg, data_sizes=sizes)
+        round_fn = p2p.make_round_fn(task, cfg, data_sizes=sizes)
 
     # stratified eval groups: seen/unseen per the union of peer classes
     if exp.peer_classes:
@@ -173,13 +167,54 @@ def run_paper_experiment(
     else:
         groups = {"all": np.arange(10)}
         x_eval, y_eval = x_te, y_te
-    x_eval_j, y_eval_j = jnp.asarray(x_eval), jnp.asarray(y_eval)
+    if task.eval_set_size is not None and len(x_eval) > task.eval_set_size:
+        # seeded subsample: recurrent evals over the full test set are
+        # minutes of CPU; the cap trades accuracy resolution for wall clock
+        idx = np.random.default_rng(seed).permutation(len(x_eval))
+        idx = np.sort(idx[: task.eval_set_size])
+        x_eval, y_eval = x_eval[idx], y_eval[idx]
+    # the task maps raw eval images to its input format ONCE, on the host
+    # (identity for the MLP; pixel-stream tokenization for sequence models)
+    x_eval_np = np.asarray(task.prepare_eval(x_eval))
+    x_eval_j = jnp.asarray(x_eval_np)
+    y_eval_j = jnp.asarray(y_eval)
 
-    eval_fn = jax.jit(
-        lambda params: p2p.stratified_accuracy(
-            mlp.apply_2nn, params, x_eval_j, y_eval_j, groups
+    if task.eval_batch_size is None:
+        eval_fn = jax.jit(
+            lambda params: p2p.stratified_accuracy(
+                task.apply_fn, params, x_eval_j, y_eval_j, groups
+            )
         )
-    )
+    else:
+        # chunked eval: per-chunk predictions, group accuracies from the
+        # concatenated (K, N) buffer — identical counts, bounded memory
+        all_classes = np.sort(np.concatenate(list(groups.values())))
+
+        @jax.jit
+        def _preds(params, xb):
+            def one(p):
+                logits = task.apply_fn(p, xb)
+                m = jnp.full((logits.shape[-1],), -1e9, jnp.float32)
+                m = m.at[jnp.asarray(all_classes)].set(0.0)
+                return jnp.argmax(logits + m, axis=-1)
+
+            return jax.vmap(one)(params)
+
+        def eval_fn(params):
+            b = task.eval_batch_size
+            pred = np.concatenate(
+                [
+                    np.asarray(_preds(params, jnp.asarray(x_eval_np[i : i + b])))
+                    for i in range(0, len(x_eval_np), b)
+                ],
+                axis=1,
+            )  # (K, N)
+            out = {}
+            for name, classes in groups.items():
+                sel = np.isin(y_eval, classes)
+                denom = max(int(sel.sum()), 1)
+                out[name] = ((pred == y_eval[None, :]) & sel[None, :]).sum(axis=1) / denom
+            return out
 
     log = metrics_lib.RoundLog()
 
@@ -311,7 +346,15 @@ def main(argv=None):
                     choices=["iid_k100", "noniid_local_dsgd", "noniid_affinity",
                              "noniid_dsgd", "p2p_lm",
                              "timevarying_k2", "timevarying_k8", "directed_k8",
-                             "sharded_k8", "straggler_k8"])
+                             "sharded_k8", "straggler_k8", "seqmnist_k8"])
+    ap.add_argument("--model", default=None,
+                    choices=sorted(task_lib.task_names()),
+                    help="the TrainTask the peers train (core/task.py): "
+                         "'mnist_mlp' — the paper's 2NN on flat images (the "
+                         "fp32 bit-identical legacy path); 'rwkv6_seqmnist' — "
+                         "RWKV6 run as an RNN over the 196-token pixel stream "
+                         "of sequential MNIST.  Default: the experiment's own "
+                         "(mnist_mlp everywhere except seqmnist_k8)")
     ap.add_argument("--peer-axis", default="vmap", choices=["vmap", "pod"],
                     help="how the K peer axis executes: 'vmap' (stacked "
                          "runtime, any device count) or 'pod' (shard_map over "
@@ -345,7 +388,10 @@ def main(argv=None):
                          "the scan driver's amortization engages")
     ap.add_argument("--rounds", type=int, default=None)
     ap.add_argument("--topology", default="complete")
-    ap.add_argument("--local-steps", type=int, default=10)
+    ap.add_argument("--local-steps", type=int, default=None,
+                    help="T local SGD steps per round (default: the "
+                         "experiment's own — 10 everywhere except "
+                         "seqmnist_k8's 4)")
     ap.add_argument("--schedule", default=None,
                     choices=["static", "link_dropout", "random_matching",
                              "peer_churn", "round_robin", "one_way_matching",
@@ -436,9 +482,9 @@ def main(argv=None):
     if args.experiment in ("timevarying_k2", "timevarying_k8"):
         builder = timevarying_k2 if args.experiment == "timevarying_k2" else timevarying_k8
         exp = builder(
-            args.schedule or "link_dropout",
-            args.algorithm,
-            args.local_steps,
+            schedule=args.schedule or "link_dropout",
+            algorithm=args.algorithm,
+            local_steps=args.local_steps or 10,
             schedule_rounds=args.schedule_rounds,
             link_survival_prob=args.link_survival_prob,
             peer_online_prob=args.peer_online_prob,
@@ -456,10 +502,10 @@ def main(argv=None):
             ap.error(f"directed_k8 supports --schedule static|link_dropout|"
                      f"one_way_matching|adaptive, got {schedule!r}")
         exp = directed_k8(
-            schedule,
-            args.protocol or "push_sum",
-            args.algorithm,
-            args.local_steps,
+            schedule=schedule,
+            protocol=args.protocol or "push_sum",
+            algorithm=args.algorithm,
+            local_steps=args.local_steps or 10,
             schedule_rounds=args.schedule_rounds,
             link_survival_prob=args.link_survival_prob,
             partner_rule=args.partner_rule,
@@ -468,10 +514,10 @@ def main(argv=None):
         )
     elif args.experiment == "sharded_k8":
         exp = sharded_k8(
-            args.schedule or "static",
-            args.protocol or "gossip",
-            args.algorithm,
-            args.local_steps,
+            schedule=args.schedule or "static",
+            protocol=args.protocol or "gossip",
+            algorithm=args.algorithm,
+            local_steps=args.local_steps or 10,
             schedule_rounds=args.schedule_rounds,
             link_survival_prob=args.link_survival_prob,
             round_robin_topologies=tuple(
@@ -487,10 +533,10 @@ def main(argv=None):
             ap.error(f"straggler_k8 supports --schedule static|round_robin, "
                      f"got {schedule!r}")
         exp = straggler_k8(
-            schedule,
-            args.protocol or "gossip",
-            args.algorithm,
-            args.local_steps,
+            schedule=schedule,
+            protocol=args.protocol or "gossip",
+            algorithm=args.algorithm,
+            local_steps=args.local_steps or 8,
             steps_profile=args.steps_profile or "straggler",
             staleness_bound=(3 if args.staleness_bound is None
                              else args.staleness_bound),
@@ -501,14 +547,32 @@ def main(argv=None):
                 t for t in args.round_robin_topologies.split(",") if t
             ),
         )
+    elif args.experiment == "seqmnist_k8":
+        exp = seqmnist_k8(
+            schedule=args.schedule or "static",
+            protocol=args.protocol or "gossip",
+            local_steps=args.local_steps or 4,
+            schedule_rounds=args.schedule_rounds,
+            round_robin_topologies=tuple(
+                t for t in args.round_robin_topologies.split(",") if t
+            ),
+        )
     elif args.experiment == "iid_k100":
-        exp = iid_k100(args.topology)
+        exp = iid_k100(topology=args.topology)
     elif args.experiment == "noniid_local_dsgd":
-        exp = noniid_k2("local_dsgd", args.local_steps)
+        exp = noniid_k2(algorithm="local_dsgd", local_steps=args.local_steps or 10)
     elif args.experiment == "noniid_dsgd":
-        exp = noniid_k2("dsgd", 1)
+        exp = noniid_k2(algorithm="dsgd", local_steps=1)
     else:
-        exp = noniid_k2("p2pl_affinity", args.local_steps)
+        exp = noniid_k2(algorithm="p2pl_affinity", local_steps=args.local_steps or 10)
+    if args.model and args.model != exp.model:
+        try:
+            exp = dataclasses.replace(
+                exp, model=args.model,
+                p2p=dataclasses.replace(exp.p2p, model=args.model),
+            )
+        except ValueError as e:
+            ap.error(str(e))
     if args.protocol and exp.p2p.protocol != args.protocol:
         exp = dataclasses.replace(
             exp, p2p=dataclasses.replace(exp.p2p, protocol=args.protocol)
@@ -540,29 +604,18 @@ def main(argv=None):
             # P2PConfig.__post_init__ rejects staleness x adaptive/compressed
             # with the actionable message — surface it as a CLI error
             ap.error(str(e))
-    if exp.p2p.use_async and args.peers_per_device > 1:
-        ap.error("--staleness-bound > 0 / a non-uniform --steps-profile is "
-                 "not supported with --peers-per-device > 1: the hierarchical "
-                 "bridge/segment mixes stream live fp32 blocks, not staleness "
-                 "snapshots. Run async rounds with one peer per device.")
     if args.peers_per_device < 1:
         ap.error(f"--peers-per-device must be >= 1, got {args.peers_per_device}")
     if args.peers_per_device > 1 and args.peer_axis != "pod":
         ap.error("--peers-per-device > 1 needs --peer-axis pod "
                  "(the hierarchical sharded runtime)")
-    if args.peers_per_device > 1 and exp.p2p.schedule == "adaptive":
-        ap.error("--schedule adaptive is not supported with "
-                 "--peers-per-device > 1: the adaptive candidate set is the "
-                 "complete graph — dense O(K^2) matrices the hierarchical "
-                 "runtime's sparse degree-bounded path exists to avoid. Run "
-                 "adaptive schedules with one peer per device "
-                 "(--peers-per-device 1), or use a pretraced schedule here.")
-    if args.peers_per_device > 1 and exp.p2p.compressor != "none":
-        ap.error(f"--compressor {exp.p2p.compressor} is not supported with "
-                 "--peers-per-device > 1: the hierarchical bridge/segment "
-                 "mixes stream raw fp32 blocks. Run compressed gossip with "
-                 "one peer per device (--peers-per-device 1), or "
-                 "--compressor none here.")
+    # every pairwise feature rejection (async/adaptive/compressor/real-model x
+    # hierarchical, ...) fires from the ONE declarative table — the same
+    # messages run_paper_experiment would raise, surfaced as CLI errors
+    try:
+        features_lib.check_config(exp.p2p, peers_per_device=args.peers_per_device)
+    except ValueError as e:
+        ap.error(str(e))
     if args.peer_axis == "pod":
         if exp.p2p.num_peers % args.peers_per_device:
             ap.error(

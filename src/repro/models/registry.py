@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.models import common
 from repro.models import transformer as tf
 
 PyTree = Any
@@ -56,6 +57,51 @@ def split_vlm_seq(cfg: ModelConfig, s: int) -> tuple[int, int]:
 def split_encdec_seq(s: int) -> tuple[int, int]:
     enc = max(s // 4, 1)
     return enc, max(s - enc, 1)
+
+
+def build_sequence_classifier(cfg: ModelConfig, num_classes: int):
+    """(init, apply, loss) for sequence classification on a registry family.
+
+    ``apply(params, tokens (B, S) int32) -> (B, num_classes) f32 logits``:
+    the family's trunk run over the token sequence, the final position's
+    hidden state (the RNN summary for recurrent families) through one linear
+    head.  ``loss(params, (tokens, labels (B,) int32))`` is mean cross
+    entropy — the ``(params, batch) -> scalar`` shape ``core.p2p`` trains.
+
+    Currently rwkv6-only: recurrent families have a natural "state after the
+    whole sequence" readout; attention families would need pooling choices
+    this signature does not yet take.
+    """
+    if cfg.family != "rwkv6":
+        raise ValueError(
+            f"build_sequence_classifier supports family 'rwkv6', got "
+            f"{cfg.family!r}"
+        )
+    dtype = tf.compute_dtype(cfg)
+
+    def init(key: jax.Array) -> PyTree:
+        k_trunk, k_head = jax.random.split(key)
+        params = tf.rwkv6_init_model(k_trunk, cfg)
+        params["cls_head"] = {
+            "w": common.dense_init(k_head, cfg.d_model, num_classes, dtype),
+            "b": jnp.zeros((num_classes,), dtype),
+        }
+        return params
+
+    def apply(params: PyTree, tokens: jax.Array) -> jax.Array:
+        # RNN mode (chunked=False): token-sequential recurrence — for short
+        # classification sequences it beats the chunked scan on CPU time AND
+        # peak memory (no (B, heads, chunk, chunk) intermediates)
+        h = tf.rwkv6_features(params, cfg, tokens, chunked=False)[:, -1]  # (B, D)
+        head = params["cls_head"]
+        return (h.astype(jnp.float32) @ head["w"].astype(jnp.float32)
+                + head["b"].astype(jnp.float32))
+
+    def loss(params: PyTree, batch) -> jax.Array:
+        tokens, labels = batch
+        return common.cross_entropy_loss(apply(params, tokens), labels)
+
+    return init, apply, loss
 
 
 def build_model(cfg: ModelConfig) -> Model:

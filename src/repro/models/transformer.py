@@ -271,6 +271,26 @@ def rwkv6_loss_fn(params, cfg: ModelConfig, batch) -> jax.Array:
     return common.cross_entropy_loss(logits, labels)
 
 
+def rwkv6_features(params, cfg: ModelConfig, tokens, *, chunked: bool = True) -> jax.Array:
+    """Trunk hidden states (B, S, D) for sequence-level heads (no unembed).
+
+    The full-sequence forward of ``rwkv6_loss_fn`` stopped before the logits:
+    embed, ln0, the layer scan from a zero recurrent state, final norm.  Used
+    by ``models.registry.build_sequence_classifier`` (e.g. the P2P
+    ``rwkv6_seqmnist`` task reads position -1 as the RNN's summary state).
+
+    ``chunked=False`` runs the token-sequential RNN recurrence instead of the
+    chunked parallel scan: same math, but O(B * D) live state instead of the
+    chunked form's O(B * heads * chunk^2) attention-shaped intermediates — on
+    CPU, for short-sequence classification, it is both smaller and faster.
+    """
+    x = common.embed_lookup(params["embed"], tokens, compute_dtype(cfg))
+    x = common.layernorm(params["ln0"], x, cfg.norm_eps)
+    states = rwkv6_init_state(cfg, tokens.shape[0])
+    x, _ = _rwkv6_trunk(params, cfg, x, states, chunked=chunked)
+    return x
+
+
 def rwkv6_prefill(params, cfg: ModelConfig, batch, states):
     tokens = batch["tokens"]
     x = common.embed_lookup(params["embed"], tokens, compute_dtype(cfg))

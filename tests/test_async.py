@@ -149,6 +149,29 @@ def test_linear_profile_ramps_and_honors_floor():
     assert (steps >= 1).all() and (period >= 1).all()
 
 
+@pytest.mark.parametrize("profile", sorted(p2p.STEPS_PROFILES))
+@pytest.mark.parametrize("num_peers,local_steps", [(2, 1), (3, 2), (8, 8),
+                                                   (16, 5)])
+@pytest.mark.parametrize("straggler_period", [1, 4, 16])
+def test_compute_profile_invariants(profile, num_peers, local_steps,
+                                    straggler_period):
+    """The documented invariants hold for EVERY profile x shape: per-peer
+    budgets and publication periods never fall below 1 (a zero-step peer
+    would freeze, a zero period divides by zero in the delivery rule), and
+    the uniform profile is exactly the synchronous (T, 1) fleet."""
+    cfg = p2p.P2PConfig(
+        num_peers=num_peers, local_steps=local_steps, steps_profile=profile,
+        straggler_period=straggler_period,
+    )
+    steps, period = p2p.compute_profile(cfg)
+    assert steps.shape == period.shape == (num_peers,)
+    assert steps.dtype == np.int32 and period.dtype == np.int32
+    assert (steps >= 1).all() and (period >= 1).all()
+    assert (steps <= local_steps).all()
+    if profile == "uniform":
+        assert (steps == local_steps).all() and (period == 1).all()
+
+
 # ---------------------------------------------------------------------------
 # age-decayed weight renormalization
 # ---------------------------------------------------------------------------

@@ -386,7 +386,8 @@ def test_launcher_rejects_adaptive_with_peers_per_device():
     from repro.configs.p2pl_mnist import timevarying_k8
     from repro.launch import train
 
-    exp = timevarying_k8("adaptive", "p2pl_affinity", 10)
+    exp = timevarying_k8(schedule="adaptive", algorithm="p2pl_affinity",
+                         local_steps=10)
     with pytest.raises(ValueError, match="adaptive.*peers_per_device"):
         train.run_paper_experiment(
             exp, rounds=1, peer_axis="pod", peers_per_device=2
@@ -398,7 +399,8 @@ def test_launcher_rejects_compressor_with_peers_per_device():
     from repro.launch import train
 
     exp = timevarying_k8(
-        "round_robin", "p2pl_affinity", 10, compressor="qint8"
+        schedule="round_robin", algorithm="p2pl_affinity", local_steps=10,
+        compressor="qint8",
     )
     with pytest.raises(ValueError, match="compressor.*peers_per_device"):
         train.run_paper_experiment(

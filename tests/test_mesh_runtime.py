@@ -307,7 +307,7 @@ def test_sharded_paper_experiment_matches_vmap_end_to_end(mnist_small):
     from repro.configs.p2pl_mnist import sharded_k8
     from repro.launch.train import run_paper_experiment
 
-    exp = sharded_k8("link_dropout", "gossip", local_steps=2)
+    exp = sharded_k8(schedule="link_dropout", protocol="gossip", local_steps=2)
     log_v = run_paper_experiment(exp, rounds=2, data=mnist_small, peer_axis="vmap")
     log_p = run_paper_experiment(exp, rounds=2, data=mnist_small, peer_axis="pod")
     for attr in ("after_local", "after_consensus"):

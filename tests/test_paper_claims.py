@@ -25,7 +25,7 @@ def test_affinity_damps_oscillation_below_local_dsgd(mnist_small):
     # reduced scale.  eta_d=0.5: stable for K=2 full averaging
     # (EXPERIMENTS.md observation O1).
     def fig6_exp(algo, eta_d):
-        exp = noniid_k2(algo, 10)
+        exp = noniid_k2(algorithm=algo, local_steps=10)
         return dataclasses.replace(
             exp,
             peer_classes=((0, 1, 2, 3, 4), (5, 6, 7, 8, 9)),
@@ -53,7 +53,8 @@ def test_affinity_damps_oscillation_below_local_dsgd(mnist_small):
 def test_timevarying_run_completes_and_measures(mnist_small):
     """A link_dropout schedule runs end-to-end through run_paper_experiment
     (single jitted round fn) and still produces the paper's instruments."""
-    exp = timevarying_k2("link_dropout", "local_dsgd", 10,
+    exp = timevarying_k2(schedule="link_dropout", algorithm="local_dsgd",
+                         local_steps=10,
                          schedule_rounds=8, link_survival_prob=0.6)
     log = _run(exp, mnist_small)
     assert len(log.after_consensus["all"]) == ROUNDS

@@ -239,3 +239,28 @@ def test_moe_capacity_invariants(ng, e, k, cf):
     c = moe.capacity(cfg, ng)
     assert c % 8 == 0 and c >= 8
     assert c * e >= ng * k * cf * 0.99  # capacity covers the requested factor
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    k=st.integers(1, 64),
+    t=st.integers(1, 64),
+    profile=st.sampled_from(["uniform", "straggler", "linear"]),
+    frac=st.floats(0.01, 1.0),
+    period=st.integers(1, 32),
+)
+def test_compute_profile_floor_invariants(k, t, profile, frac, period):
+    """compute_profile never emits a zero budget or zero period, whatever
+    fleet size / step count / slowdown hypothesis throws at it, and the
+    uniform profile is always exactly the synchronous (T, 1) fleet."""
+    from repro.core import p2p
+
+    cfg = p2p.P2PConfig(
+        num_peers=k, local_steps=t, steps_profile=profile,
+        straggler_frac=frac, straggler_period=period,
+    )
+    steps, periods = p2p.compute_profile(cfg)
+    assert (steps >= 1).all() and (steps <= t).all()
+    assert (periods >= 1).all()
+    if profile == "uniform":
+        assert (steps == t).all() and (periods == 1).all()

@@ -15,7 +15,8 @@ def data():
 
 @pytest.fixture(scope="module")
 def local_dsgd_log(data):
-    return run_paper_experiment(noniid_k2("local_dsgd", 10), rounds=12, data=data)
+    return run_paper_experiment(
+        noniid_k2(algorithm="local_dsgd", local_steps=10), rounds=12, data=data)
 
 
 def test_forgetting_and_consensus_recovery(local_dsgd_log):
@@ -40,7 +41,9 @@ def test_seen_class_oscillation_is_opposite(local_dsgd_log):
 def test_affinity_damps_oscillations(data, local_dsgd_log):
     """Fig. 6: P2PL with Affinity reduces unseen-class oscillation amplitude
     vs. local DSGD at identical communication cost."""
-    log_aff = run_paper_experiment(noniid_k2("p2pl_affinity", 10), rounds=12, data=data)
+    log_aff = run_paper_experiment(
+        noniid_k2(algorithm="p2pl_affinity", local_steps=10), rounds=12,
+        data=data)
     osc_plain = local_dsgd_log.mean_oscillation("peer1_seen")
     osc_aff = log_aff.mean_oscillation("peer1_seen")
     assert osc_aff < osc_plain, (osc_aff, osc_plain)
@@ -48,7 +51,8 @@ def test_affinity_damps_oscillations(data, local_dsgd_log):
 
 def test_dsgd_smaller_oscillation_than_local_dsgd(data, local_dsgd_log):
     """Fig. 4: fewer local steps between consensus -> smaller oscillations."""
-    log_dsgd = run_paper_experiment(noniid_k2("dsgd", 1), rounds=12, data=data)
+    log_dsgd = run_paper_experiment(
+        noniid_k2(algorithm="dsgd", local_steps=1), rounds=12, data=data)
     assert log_dsgd.mean_oscillation("peer1_seen") < local_dsgd_log.mean_oscillation(
         "peer1_seen"
     )
@@ -63,7 +67,8 @@ def test_drift_grows_locally_shrinks_at_consensus(local_dsgd_log):
 def test_directed_k8_push_sum_trains(data):
     """The directed-ring push-sum experiment runs end to end: finite losses,
     conserved mass, consensus actually mixes the one-way ring."""
-    exp = directed_k8("static", "push_sum", "p2pl_affinity", 10)
+    exp = directed_k8(schedule="static", protocol="push_sum",
+                      algorithm="p2pl_affinity", local_steps=10)
     log = run_paper_experiment(exp, rounds=6, data=data)
     assert np.isfinite(log.train_loss).all()
     # consensus over the directed ring must pull peers together vs local drift

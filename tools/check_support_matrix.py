@@ -1,0 +1,71 @@
+"""Check (or regenerate) the README's generated feature-compatibility table.
+
+The cross-feature exclusion matrix in the README is GENERATED from the one
+source of truth, ``repro.core.features.INCOMPATIBILITIES`` — the same table
+every runtime layer raises from.  This script compares the block between the
+
+    <!-- BEGIN GENERATED SUPPORT MATRIX (tools/check_support_matrix.py) -->
+    <!-- END GENERATED SUPPORT MATRIX -->
+
+markers against ``features.support_matrix_markdown()`` and fails on drift, so
+documented compatibility and enforced compatibility cannot diverge.
+
+    python tools/check_support_matrix.py README.md           # check (CI)
+    python tools/check_support_matrix.py README.md --write   # regenerate
+
+Exit status 0 iff the block matches (or was rewritten with ``--write``).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.core import features  # noqa: E402
+
+BEGIN = "<!-- BEGIN GENERATED SUPPORT MATRIX (tools/check_support_matrix.py) -->"
+END = "<!-- END GENERATED SUPPORT MATRIX -->"
+
+
+def split_block(text: str, path: str) -> tuple[str, str, str]:
+    """(before, inside, after) around the marker pair; errors are fatal."""
+    try:
+        head, rest = text.split(BEGIN, 1)
+        inside, tail = rest.split(END, 1)
+    except ValueError:
+        sys.exit(f"{path}: marker pair not found (need both {BEGIN!r} and {END!r})")
+    return head, inside, tail
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("readme", help="markdown file holding the generated block")
+    ap.add_argument("--write", action="store_true",
+                    help="rewrite the block instead of checking it")
+    args = ap.parse_args(argv)
+
+    path = Path(args.readme)
+    text = path.read_text()
+    head, inside, tail = split_block(text, args.readme)
+    want = "\n" + features.support_matrix_markdown()
+
+    if inside == want:
+        print(f"OK: {args.readme} support matrix matches "
+              f"core/features.py ({len(features.INCOMPATIBILITIES)} rows)")
+        return 0
+    if args.write:
+        path.write_text(head + BEGIN + want + END + tail)
+        print(f"rewrote {args.readme} support matrix "
+              f"({len(features.INCOMPATIBILITIES)} rows)")
+        return 0
+    print(f"{args.readme}: support matrix is out of date with "
+          "core/features.py — run:\n"
+          f"    python tools/check_support_matrix.py {args.readme} --write",
+          file=sys.stderr)
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
